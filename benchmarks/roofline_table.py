@@ -1,0 +1,91 @@
+"""Aggregate the dry-run JSONs into the §Dry-run / §Roofline tables of
+EXPERIMENTS.md.  Reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun), writes markdown to stdout."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(mode: str, mesh: str | None = None) -> dict:
+    out = {}
+    for p in sorted(DRYRUN_DIR.glob(f"*_{mode}.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_b(x) -> str:
+    return f"{(x or 0) / 1e9:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = load("production")
+    lines = [
+        "| arch | shape | mesh | A | remat | raw GB/dev | proj GB/dev | fits 16G | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        m = r["memory"]
+        scfg = r.get("step_config", {})
+        proj = m.get("tpu_projected_bytes") or 0
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {scfg.get('accum_steps')} "
+            f"| {scfg.get('remat')} | {fmt_b(m.get('per_device_total_bytes'))} "
+            f"| {fmt_b(proj)} | {'✓' if proj < 16e9 else '✗'} "
+            f"| {r.get('t_compile_s', r.get('t_total_s'))} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = load("analysis", mesh="pod")
+    lines = [
+        "| arch | shape | T_comp ms | T_mem ms | T_coll ms | bound | roofline-frac"
+        " | 6ND/HLO | (+attn)/HLO |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        t = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {t['T_comp'] * 1e3:.1f} | {t['T_mem'] * 1e3:.1f} "
+            f"| {t['T_coll'] * 1e3:.1f} | {t['bottleneck'][2:]} "
+            f"| {t['roofline_fraction']:.2f} | {t['useful_ratio']:.2f} "
+            f"| {t.get('useful_ratio_with_attn', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def collective_summary() -> str:
+    rows = load("analysis", mesh="pod")
+    lines = ["| arch | shape | coll ops | wire GB/chip | dominant axis | dominant kind |",
+             "|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        c = r.get("collectives", {})
+        ax = max(c.get("by_axis", {"-": 0}).items(), key=lambda kv: kv[1])[0]
+        kd = max(c.get("by_kind", {"-": 0}).items(), key=lambda kv: kv[1])[0]
+        lines.append(f"| {arch} | {shape} | {c.get('ops')} "
+                     f"| {fmt_b(c.get('wire_bytes_per_chip'))} | {ax} | {kd} |")
+    return "\n".join(lines)
+
+
+def run() -> str:
+    prod = load("production")
+    ana = load("analysis")
+    return (
+        f"== Dry-run: {len(prod)} production cells "
+        f"({len([1 for k in prod if k[2] == 'multipod'])} multipod), "
+        f"{len(ana)} analysis cells ==\n\n"
+        "### Production (memory proof)\n" + dryrun_table() +
+        "\n\n### Roofline (single-pod analysis lowering)\n" + roofline_table() +
+        "\n\n### Collectives\n" + collective_summary()
+    )
+
+
+if __name__ == "__main__":
+    print(run())

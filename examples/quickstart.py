@@ -1,0 +1,68 @@
+"""Quickstart: the paper's semaphores in 60 seconds.
+
+  1. L1 (threads): TicketSemaphore vs TWASemaphore vs the non-FIFO pthread
+     baseline guarding a critical section — FIFO order demonstrated.
+  2. L2 (in-graph): the batched functional semaphore admitting requests
+     FCFS inside a jitted step, with TWA-bucket selective re-checks.
+  3. The coherence-model sweep reproducing the shape of the paper's Fig. 1.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PthreadLikeSemaphore,
+    TicketSemaphore,
+    TWASemaphore,
+    make_sema,
+    poll,
+    post_batch,
+    take_batch,
+    sweep,
+)
+
+# ---------------------------------------------------------------- 1. L1 ----
+print("== L1: host-thread semaphores ==")
+for name, sem in [
+    ("ticket (broadcast parking)", TicketSemaphore(1, waiting="broadcast")),
+    ("TWA    (futex buckets)    ", TWASemaphore(1, waiting="futex")),
+    ("pthread (non-FIFO)        ", PthreadLikeSemaphore(1)),
+]:
+    counter = {"x": 0}
+
+    def worker():
+        for _ in range(200):
+            sem.take()
+            counter["x"] += 1  # protected by the semaphore (count=1)
+            sem.post()
+
+    ts = [threading.Thread(target=worker) for _ in range(8)]
+    t0 = time.time()
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    print(f"  {name}: x={counter['x']} (expected 1600)  {time.time() - t0:.3f}s")
+
+# ---------------------------------------------------------------- 2. L2 ----
+print("\n== L2: batched in-graph semaphore (FCFS admission) ==")
+s = make_sema(count=3, table_size=64)
+s, tickets, admitted, buckets = take_batch(s, jnp.ones(6, bool))
+print(f"  6 arrivals, 3 slots → tickets={np.asarray(tickets)} "
+      f"admitted={np.asarray(admitted).astype(int)}")
+s = post_batch(s, 2)  # two slots free up
+print(f"  post(2) → now admitted={np.asarray(poll(s, tickets)).astype(int)} "
+      f"(strictly FIFO: tickets 3,4 enabled, 5 still waits)")
+
+# --------------------------------------------------------------- 3. Fig1 ----
+print("\n== Fig.1-shaped sweep (coherence-cost model) ==")
+res = sweep(thread_counts=(1, 2, 4, 8, 16, 32, 64))
+print(f"  {'T':>4} {'ticket':>12} {'TWA':>12} {'pthread':>12}  (ops/sec)")
+for i, t in enumerate((1, 2, 4, 8, 16, 32, 64)):
+    print(f"  {t:>4} {res['ticket'][i].throughput_per_sec:>12.0f} "
+          f"{res['twa'][i].throughput_per_sec:>12.0f} "
+          f"{res['pthread'][i].throughput_per_sec:>12.0f}")
+print("  → Ticket decays with global spinning; TWA stays flat (the paper's claim)")

@@ -1,0 +1,56 @@
+"""End-to-end training example: ~100M-param model, a few hundred steps on CPU
+through the full stack (TWA-buffered data pipeline, AdamW, async checkpoints,
+coordinator heartbeats), with a mid-run checkpoint-restore to prove
+fault-tolerant resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 300]
+(A ~100M model on 1 CPU core takes a while; --small trains the reduced config
+used by CI instead.)
+"""
+
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.train import main as train_main
+
+
+def run(steps: int, small: bool):
+    with tempfile.TemporaryDirectory() as ckdir:
+        argv = [
+            "--arch", "qwen2-0.5b", "--smoke",
+            "--steps", str(steps), "--batch", "8", "--seq", "128",
+            "--ckpt-dir", ckdir, "--ckpt-every", str(max(10, steps // 4)),
+        ]
+        if not small:
+            # scale the reduced config up to ~100M params via the registry's
+            # overrides: wider model, deeper stack
+            import repro.configs.base as base
+            import repro.configs.registry as registry
+
+            orig = registry.get_smoke_config
+
+            def bigger(arch):
+                return dataclasses.replace(
+                    orig(arch), d_model=512, n_heads=8, n_kv_heads=2,
+                    head_dim=64, d_ff=2048, num_units=12, vocab=32768,
+                    name=arch + "-100m",
+                )
+
+            registry.get_smoke_config = bigger
+        losses = train_main(argv)
+        # resume from the checkpoint and train a few more steps
+        print("\n[example] simulating restart: --resume from checkpoint")
+        more = train_main(argv + ["--resume", "--steps", str(steps + 10)])
+        assert more[-1] < losses[0], "resumed training regressed"
+        print("[example] resume OK — loss continued from checkpointed state")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--small", action="store_true")
+    args = ap.parse_args()
+    run(args.steps, args.small)

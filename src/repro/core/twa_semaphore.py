@@ -1,0 +1,159 @@
+"""Listing 2 — TWA-Semaphore: Ticket-Semaphore augmented with a waiting array.
+
+Arriving threads whose distance to Grant exceeds ``LongTermThreshold`` leave
+the hot Grant location and wait *semi-locally* on a hashed bucket of a shared
+fixed-size waiting array (proxy ``UpdateSequence`` modification indicators).
+``post`` increments Grant, then pokes the bucket for ticket value
+``grant + LongTermThreshold`` — the *successor's successor* — shifting it
+from long-term (bucket) to short-term (Grant) waiting while the immediate
+successor is already entering the critical section: wakeup staging overlaps
+useful work.
+
+Global spinning is reduced to ≤ LongTermThreshold threads per semaphore at a
+time; all other waiting is dispersed over the array by the ticket-aware hash.
+
+The waiting array is **process-global and shared by all semaphores** (as in
+the paper); collisions across unrelated semaphores are benign (spurious
+re-checks), only a performance concern.
+
+Bucket waiting modes:
+  - "spin":  Listing 2 verbatim — poll the bucket's UpdateSequence.
+  - "futex": block on the bucket (futex/WaitOnAddress analogue): waiters
+             sleep on a per-bucket condition keyed by UpdateSequence value;
+             the poke is a notify_all on that bucket only.  Because buckets
+             are dispersed by TWAHash, futex-style waiting also disperses
+             kernel hashtable traffic — the paper's noted side benefit.
+
+``post`` implements the benaphore-style fast path: after the Grant
+fetch_add, if ``grant + threshold - Ticket >= 0`` there can be no long-term
+waiter needing notification and the bucket poke is skipped (racy but
+conservative — never skips a *needed* poke, may rarely do a futile one).
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .atomics import AtomicU64
+from .hashfn import index_for, twa_hash
+from .parking import pause
+from .ticket_semaphore import _dist
+
+DEFAULT_TABLE_SIZE = 2048
+DEFAULT_LONG_TERM_THRESHOLD = 1
+
+
+class WaitBucket:
+    """One slot of the waiting array.
+
+    ``seq`` is the paper's UpdateSequence. The condition variable exists only
+    for "futex" mode; spin mode never touches it. (In C++ the bucket is a
+    single aligned cache line; object-per-bucket is the Python analogue of
+    the 128-byte sector alignment.)
+    """
+
+    __slots__ = ("seq", "_cond")
+
+    def __init__(self):
+        self.seq = AtomicU64(0)
+        self._cond = threading.Condition()
+
+    def wait_for_change(self, observed: int, spin: bool) -> None:
+        if spin:
+            while self.seq.load() == observed:
+                pause()
+        else:
+            with self._cond:
+                while self.seq.load() == observed:
+                    self._cond.wait()
+
+    def poke(self) -> None:
+        self.seq.fetch_add(1)
+        with self._cond:
+            self._cond.notify_all()
+
+
+class WaitingArray:
+    """Process-wide waiting array (flat table of WaitBucket)."""
+
+    def __init__(self, table_size: int = DEFAULT_TABLE_SIZE):
+        assert table_size > 0 and (table_size & (table_size - 1)) == 0
+        self.table_size = table_size
+        self.buckets = [WaitBucket() for _ in range(table_size)]
+
+    def bucket_for(self, key: int) -> WaitBucket:
+        return self.buckets[index_for(key, self.table_size)]
+
+
+# The process-global default array, shared by every TWASemaphore (paper §1:
+# "The waiting array is shared by all threads in the process and is of fixed
+# size.").
+_GLOBAL_ARRAY = WaitingArray()
+
+
+class TWASemaphore:
+    def __init__(
+        self,
+        count: int = 0,
+        waiting: str = "spin",
+        long_term_threshold: int = DEFAULT_LONG_TERM_THRESHOLD,
+        array: WaitingArray | None = None,
+        post_fast_path: bool = True,
+        hash_fn=twa_hash,
+    ):
+        assert count >= 0
+        assert waiting in ("spin", "futex")
+        self.ticket = AtomicU64(0)
+        self.grant = AtomicU64(count)
+        self.threshold = long_term_threshold
+        self.array = array if array is not None else _GLOBAL_ARRAY
+        self._spin_buckets = waiting == "spin"
+        self._post_fast_path = post_fast_path
+        self._hash = hash_fn
+        self._addr = id(self)  # uintptr_t(L) component of TWAHash
+
+    # -- take ----------------------------------------------------------------
+    def take(self) -> None:
+        tx = self.ticket.fetch_add(1)
+        dx = _dist(self.grant.load(), tx)
+        if dx > 0:  # fast-path uncontended return
+            return
+        # slow path: contended — need to wait.
+        bucket = self.array.bucket_for(self._hash(self._addr, tx))
+        mx = bucket.seq.load()
+        while True:
+            dx = _dist(self.grant.load(), tx)
+            if dx > 0:
+                return
+            if (dx + self.threshold) > 0:
+                # Short-term: near the head of the logical queue — global
+                # polling directly on Grant for minimal handover latency.
+                pause()
+                continue
+            # Long-term distal waiting — semi-local via the waiting array;
+            # the bucket's UpdateSequence is a proxy change indicator.
+            vx = mx
+            bucket.wait_for_change(vx, self._spin_buckets)
+            mx = bucket.seq.load()
+
+    # -- post ----------------------------------------------------------------
+    def post(self, n: int = 1) -> None:
+        for _ in range(n):  # each unit may enable a distinct long-term waiter
+            g = self.grant.fetch_add(1)
+            g += self.threshold
+            if self._post_fast_path:
+                # Benaphore-style conservative fast path: if no thread can be
+                # long-term waiting past g, skip the array access entirely —
+                # avoids "marching" through the array on uncontended posts.
+                dx = _dist(g, self.ticket.load())
+                if dx >= 0:
+                    continue
+            # Poke successor-of-successor from long-term into short-term mode.
+            self.array.bucket_for(self._hash(self._addr, g)).poke()
+
+    # -- introspection ---------------------------------------------------------
+    def queue_depth(self) -> int:
+        return max(0, -_dist(self.grant.load(), self.ticket.load()))
+
+    def available(self) -> int:
+        return max(0, _dist(self.grant.load(), self.ticket.load()))

@@ -1,0 +1,121 @@
+"""Pallas TPU flash-decode kernel: one query token per sequence against a
+long (possibly rolling) KV cache.
+
+TPU adaptation notes:
+  * decode is memory-bound (the whole KV cache streams HBM→VMEM once); the
+    kernel's job is to keep that stream dense and fuse the softmax so no
+    (B,H,C) score tensor ever exists in HBM;
+  * grid = (B·KV, C/block_k) with the cache-block axis innermost-sequential;
+    m/l/acc VMEM scratch carries the online softmax — identical recurrence
+    to the prefill kernel but with all G q-heads of the kv-head resident
+    (G·hd ≤ 64·256 → a few KiB);
+  * explicit per-slot positions (pos_ref, -1 ⇒ empty) make the same kernel
+    correct for rolling sliding-window buffers and ragged continuous-batching
+    rows — masking is data-driven, matching models/cache.py semantics;
+  * on a sequence-sharded cache (the production decode sharding), each model
+    shard runs this kernel over its slice and the LSE merge happens in the
+    surrounding jnp (psum) — kernel stays single-core-local, communication
+    stays in XLA's hands.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale, window):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (G, hd)
+    k = k_ref[0]  # (block_k, hd)
+    v = v_ref[0]
+    kpos = pos_ref[0]  # (block_k,) int32
+    qpos = qpos_ref[0]  # scalar int32 per row
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale  # (G, block_k)
+    d = qpos - kpos[None, :]
+    mask = (kpos[None, :] >= 0) & (d >= 0)
+    if window > 0:
+        mask &= d < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, kv_pos, q_pos, *, window=0, block_k=512,
+                     interpret=False):
+    """q: (B, H, hd); k/v: (B, C, KV, hd); kv_pos: (B, C) int32 (-1 empty);
+    q_pos: (B,) int32 → (B, H, hd)."""
+    B, H, hd = q.shape
+    _, C, KV, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    block_k = min(block_k, C)
+    pad = (-C) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    Cp = C + pad
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Cp, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Cp, hd)
+    pos = jnp.repeat(kv_pos, KV, axis=0)  # (B·KV, Cp)
+    qp = jnp.repeat(q_pos, KV)  # (B·KV,)
+
+    grid = (B * KV, Cp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ik: (bh,)),
+            pl.BlockSpec((1, G, hd), lambda bh, ik: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda bh, ik: (bh, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, ik: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, qr, kr, vr, pos)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute via interpret=True; on TPU they
+compile natively.  The model code keeps the pure-jnp path as default (the
+512-device host dry-run cannot lower Pallas); serving/benchmarks opt in via
+use_pallas=True or REPRO_USE_PALLAS=1.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention_fwd as _flash_attention_fwd
+from .sema_batch import sema_batch as _sema_batch
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512, block_k=512):
+    return _flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+def decode_attention(q, k, v, kv_pos, q_pos, *, window=0, block_k=512):
+    return _decode_attention(
+        q, k, v, kv_pos, q_pos, window=window, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+def sema_batch(ticket, grant, bucket_seq, requests, post_n, salt, *, block_n=512):
+    return _sema_batch(
+        ticket, grant, bucket_seq, requests, post_n, salt,
+        block_n=block_n, interpret=_interpret(),
+    )
+
+
+def pallas_enabled() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1" or jax.default_backend() == "tpu"

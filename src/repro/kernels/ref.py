@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels are
+allclose-validated against, shape/dtype-swept in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+MASK32 = (1 << 32) - 1
+TICKET_STRIDE = 17
+
+
+# ------------------------------------------------------------ sema_batch ----
+
+
+def sema_batch_ref(ticket, grant, bucket_seq, requests, post_n, salt):
+    """Oracle for the fused batched semaphore pass (the paper's take+post+
+    notify adapted to a vector of K requests — see core/functional.py).
+
+    Inputs (all jnp):
+      ticket, grant: uint32 scalars     bucket_seq: (T,) uint32
+      requests: (N,) bool               post_n: uint32 scalar
+      salt: uint32 scalar (semaphore identity — uintptr_t(L) of TWAHash)
+
+    Returns dict with new ticket/grant/bucket_seq, per-row tickets, admitted
+    mask, bucket index, and woken mask (bucket moved this pass).
+    """
+    T = bucket_seq.shape[0]
+    req = requests.astype(jnp.uint32)
+    ranks = jnp.cumsum(req) - req
+    tickets = ticket + ranks
+    admitted = requests & ((grant - tickets).astype(jnp.int32) > 0)
+    new_ticket = ticket + jnp.sum(req)
+
+    idx = ((salt + tickets * jnp.uint32(TICKET_STRIDE)) & jnp.uint32(T - 1)).astype(jnp.int32)
+
+    # post: grant advances by post_n; the enabled ticket range's buckets bump
+    offs = jnp.arange(T, dtype=jnp.uint32)
+    enabled = offs < post_n
+    post_idx = ((salt + (grant + offs) * jnp.uint32(TICKET_STRIDE)) & jnp.uint32(T - 1)).astype(jnp.int32)
+    bump = jnp.zeros((T,), jnp.uint32).at[post_idx].add(enabled.astype(jnp.uint32))
+    new_seq = bucket_seq + bump
+    woken = requests & (new_seq[idx] != bucket_seq[idx])
+    return {
+        "ticket": new_ticket,
+        "grant": grant + post_n,
+        "bucket_seq": new_seq,
+        "tickets": tickets,
+        "admitted": admitted,
+        "bucket": idx,
+        "woken": woken,
+    }
+
+
+# -------------------------------------------------------- flash attention ---
+
+
+def mha_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Naive O(S²) attention oracle. q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd).
+    GQA by head repetition; fp32 softmax; q_offset = absolute position of
+    q row 0 (so a decode/step query can attend to a longer prefix)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    kh = jnp.repeat(k, group, axis=2)
+    vh = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kh.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(hd)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    d = qpos[:, None] - kpos[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= d >= 0
+    if window > 0:
+        mask &= d < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# -------------------------------------------------------- decode attention ---
+
+
+def decode_attention_ref(q, k, v, kv_pos, q_pos, *, window=0):
+    """Single-token decode oracle with explicit KV slot positions.
+    q: (B,H,hd); k/v: (B,C,KV,hd); kv_pos: (B,C) int32 (-1 ⇒ empty);
+    q_pos: (B,) int32. Returns (B,H,hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, C, KV, _ = k.shape
+    group = H // KV
+    kh = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vh = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32), kh) / math.sqrt(hd)
+    d = q_pos[:, None] - kv_pos  # (B,C)
+    mask = (kv_pos >= 0) & (d >= 0)
+    if window > 0:
+        mask &= d < window
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhc,bchd->bhd", p, vh).astype(q.dtype)

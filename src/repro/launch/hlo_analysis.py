@@ -1,0 +1,251 @@
+"""Collective-traffic analysis of lowered/compiled HLO text.
+
+`compiled.cost_analysis()` has no collective accounting, so we parse the
+optimized HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes ring-model wire bytes per chip:
+
+    all-gather         : out_bytes · (n-1)/n
+    reduce-scatter     : in_bytes  · (n-1)/n        (= out_bytes·(n-1))
+    all-reduce         : 2 · bytes · (n-1)/n
+    all-to-all         : bytes · (n-1)/n
+    collective-permute : bytes
+
+`n` = replica-group size, parsed from the `replica_groups` attribute (both
+explicit `{{0,1,..}}` and iota `[g,n]<=[N]...` forms).  Each op is classified
+onto a mesh axis by the *stride pattern* of its first replica group against
+the device order of the (pod, data, model) mesh: contiguous → "model",
+stride model_size → "data", stride data·model → "pod"; mixed groups are
+labelled by the outermost axis they span (their bytes cross the slowest
+link involved).
+
+CAVEAT (while loops): XLA prints a while-loop body once, so collectives
+inside scans are counted once per body.  The dry-run therefore parses the
+*analysis lowering* (all static-trip loops unrolled); the production
+lowering is used for memory numbers only.  See EXPERIMENTS.md §Method.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[\dx,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _tuple_bytes(inner: str) -> int:
+    return sum(_shape_bytes(s) for s in re.findall(r"\w+\[[\d,]*\]", inner))
+
+
+def _parse_first_group(attr: str) -> list[int]:
+    """First replica group as a device list."""
+    if attr.startswith("{{"):
+        first = attr[2 : attr.index("}")]
+        return [int(x) for x in first.split(",") if x.strip()]
+    # iota form: [G,g]<=[dims...](T(perm))?  — groups are rows of a reshaped
+    # (possibly transposed) iota over N devices.
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", attr)
+    if not m:
+        return []
+    out_dims = [int(x) for x in m.group(1).split(",")]
+    in_dims = [int(x) for x in m.group(2).split(",")]
+    perm = [int(x) for x in m.group(3).split(",")] if m.group(3) else list(range(len(in_dims)))
+    n = 1
+    for d in in_dims:
+        n *= d
+    # devices = iota(N).reshape(in_dims).transpose(perm).reshape(out_dims)
+    import numpy as np
+
+    dev = np.arange(n).reshape(in_dims).transpose(perm).reshape(out_dims)
+    return list(map(int, dev[0].ravel())) if dev.ndim > 1 else [int(dev[0])]
+
+
+def _classify_axis(group: list[int], axis_sizes: dict[str, int]) -> str:
+    """Mesh axis (or composite) whose devices this group spans.  Device id =
+    ((pod·data)+d)·model + m for mesh order (pod, data, model)."""
+    if len(group) < 2:
+        return "self"
+    model = axis_sizes.get("model", 1)
+    data = axis_sizes.get("data", 1)
+    stride = group[1] - group[0]
+    size = len(group)
+    if stride == 1:
+        if size <= model:
+            return "model"
+        return "model+" if size <= model * data else "all"
+    if stride == model:
+        return "data" if size <= data else "data+pod"
+    if stride == model * data:
+        return "pod"
+    return "mixed"
+
+
+@dataclass
+class CollectiveStats:
+    ops: int = 0
+    wire_bytes_per_chip: float = 0.0
+    by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    by_axis: dict = field(default_factory=lambda: defaultdict(float))
+    details: list = field(default_factory=list)
+
+
+def analyze_collectives(hlo_text: str, axis_sizes: dict[str, int],
+                        keep_details: int = 40) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_inner, single_shape, kind = m.groups()
+        out_bytes = _tuple_bytes(tuple_inner) if tuple_inner else _shape_bytes(single_shape)
+        gm = _GROUPS_RE.search(line)
+        group = _parse_first_group(gm.group(1)) if gm else []
+        n = max(len(group), 1)
+        if n == 1:
+            continue  # degenerate
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            wire = out_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (n - 1)  # out is the scattered shard
+        elif kind == "all-reduce":
+            wire = 2 * out_bytes * frac
+        elif kind == "all-to-all":
+            wire = out_bytes * frac
+        else:  # collective-permute
+            wire = out_bytes
+        axis = _classify_axis(group, axis_sizes)
+        stats.ops += 1
+        stats.wire_bytes_per_chip += wire
+        stats.by_kind[kind] += wire
+        stats.by_axis[axis] += wire
+        if len(stats.details) < keep_details:
+            stats.details.append(
+                {"kind": kind, "bytes": out_bytes, "group_n": n, "axis": axis, "wire": wire}
+            )
+    stats.by_kind = dict(stats.by_kind)
+    stats.by_axis = dict(stats.by_axis)
+    return stats
+
+
+# ------------------------------------------------------------- roofline -----
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link (intra-pod)
+DCI_BW = 9e9  # B/s per chip across pods (assumed; sensitivity in EXPERIMENTS)
+
+
+def analytic_hbm_bytes(cfg, shape, axes: dict, accum: int = 1) -> float:
+    """Per-chip HBM traffic model for one step (the TPU-projected memory
+    term; `bytes accessed` from the CPU backend is an upper bound that
+    double-counts fused intermediates and f32-widens bf16 — see
+    EXPERIMENTS.md §Roofline note 5).
+
+    Components (all bytes, per chip, per step):
+      weights   train: 2·(P/tp)·A      (fwd+bwd weight reads per microbatch;
+                                         FSDP gathers land in HBM once each)
+                serve: P/tp
+      optimizer train: 8·(P·4B)/(tp·dp)  (master+mu+nu read/write + fp32 grad)
+      carries   train: 6·L·tokens_chip·d·2B  (save + bwd read + recompute rw)
+                prefill: 2·L·tokens_chip·d·2B
+      attention KV stream: n_q_blocks × local KV bytes per layer (flash
+                kernel semantics: scores/probs stay in VMEM)
+      kv cache  decode: 3×local cache (attention read + ring-write rw)
+                prefill: +1 write
+      moe       expert buffer rw: 4·tokens·k·(d+d_e)·2B / ep_shards
+    """
+    tp = axes.get("model", 1)
+    dp = axes.get("data", 1) * axes.get("pod", 1)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    P = cfg.param_count() * 2  # bf16
+    total = 0.0
+    if shape.kind == "train":
+        tokens_chip = B * S / dp
+        total += 2 * (P / tp) * accum
+        total += 8 * (P * 2) / (tp * dp)
+        total += 6 * L * tokens_chip * d * 2
+    elif shape.kind == "prefill":
+        tokens_chip = B * S / dp
+        total += P / tp
+        total += 2 * L * tokens_chip * d * 2
+    else:  # decode
+        total += P / tp
+        tokens_chip = B / dp
+
+    # attention KV streaming / cache traffic
+    n_attn = sum(1 for b in cfg.blocks if b.kind in ("attn", "moe"))
+    kv_row_bytes = 2 * cfg.n_kv_heads * cfg.hd * 2  # k+v bf16 per token
+    if n_attn:
+        if shape.kind == "decode":
+            # cache sharded over seq (tp) and batch (dp): local slice per layer
+            for b in cfg.blocks:
+                if b.kind not in ("attn", "moe"):
+                    continue
+                ctx = min(S, b.window) if b.window else S
+                local = (B / dp) * (ctx / tp) * kv_row_bytes
+                total += 3 * local  # attn read + one-hot ring write (rw)
+        else:
+            nq = max(1, S // 512)  # flash q-block revisits of the KV stream
+            mult = 3.0 if shape.kind == "train" else 1.0  # fwd+recompute+bwd
+            for b in cfg.blocks:
+                if b.kind not in ("attn", "moe"):
+                    continue
+                ctx = min(S, b.window) if b.window else S
+                total += mult * (B / dp) * nq * ctx * kv_row_bytes
+            if shape.kind == "prefill":
+                total += (B / dp) * S * kv_row_bytes * n_attn / tp  # cache write
+    if cfg.n_experts:
+        n_moe = sum(1 for b in cfg.blocks if b.kind == "moe")
+        ep = max(cfg.n_experts, cfg.n_experts_pad)
+        eshard = tp if ep % tp == 0 else 1
+        tokens_chip_all = (B * (S if shape.kind != "decode" else 1)) / dp
+        total += (4 * tokens_chip_all * cfg.top_k * (d + cfg.d_expert) * 2
+                  * n_moe / eshard)
+    return total
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   coll: CollectiveStats) -> dict:
+    ici_bytes = sum(v for k, v in coll.by_axis.items() if k != "pod")
+    dci_bytes = coll.by_axis.get("pod", 0.0)
+    t_comp = flops_per_chip / PEAK_FLOPS_BF16
+    t_mem = hbm_bytes_per_chip / HBM_BW
+    t_coll = ici_bytes / ICI_BW + dci_bytes / DCI_BW
+    terms = {"T_comp": t_comp, "T_mem": t_mem, "T_coll": t_coll,
+             "ici_bytes": ici_bytes, "dci_bytes": dci_bytes}
+    terms["bottleneck"] = max(("T_comp", "T_mem", "T_coll"), key=lambda k: terms[k])
+    # roofline fraction: useful compute time over the max term (overlap-ideal)
+    bound = max(t_comp, t_mem, t_coll)
+    terms["roofline_fraction"] = (t_comp / bound) if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,58 @@
+"""Recompute roofline terms for already-measured analysis JSONs (idempotent
+post-processor — lets the memory model / hardware constants evolve without
+re-running the expensive lowerings)."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from ..configs.registry import SHAPES, get_config
+from .dryrun import attn_model_flops, model_flops, scan_flop_correction
+from .hlo_analysis import analytic_hbm_bytes, roofline_terms
+
+
+def recompute(path: Path) -> bool:
+    r = json.loads(path.read_text())
+    if not r.get("ok") or r.get("mode") != "analysis":
+        return False
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    axes = ({"pod": 2, "data": 16, "model": 16} if r["mesh"] == "multipod"
+            else {"data": 16, "model": 16})
+    n_chips = r["chips"]
+
+    class _C:
+        by_axis = r["collectives"]["by_axis"]
+
+    correction = scan_flop_correction(cfg, shape)
+    flops_chip = r["cost"]["flops"] + correction / n_chips
+    terms = roofline_terms(flops_chip, r["cost"]["bytes_accessed"], _C)
+    mem_model = analytic_hbm_bytes(cfg, shape, axes, accum=1)
+    terms["T_mem_hlo_upper"] = terms["T_mem"]
+    terms["T_mem"] = mem_model / 819e9
+    terms["hbm_model_bytes"] = mem_model
+    bound = max(terms["T_comp"], terms["T_mem"], terms["T_coll"])
+    terms["bottleneck"] = max(("T_comp", "T_mem", "T_coll"), key=lambda k: terms[k])
+    terms["roofline_fraction"] = terms["T_comp"] / bound if bound else 0.0
+    mf = model_flops(cfg, shape)
+    terms["model_flops_total"] = mf
+    terms["hlo_flops_total"] = flops_chip * n_chips
+    terms["useful_ratio"] = mf / max(terms["hlo_flops_total"], 1.0)
+    terms["attn_model_flops_total"] = attn_model_flops(cfg, shape)
+    terms["useful_ratio_with_attn"] = (mf + terms["attn_model_flops_total"]) / max(
+        terms["hlo_flops_total"], 1.0)
+    r["roofline"] = terms
+    path.write_text(json.dumps(r, indent=2))
+    return True
+
+
+def main():
+    d = Path(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    n = sum(recompute(p) for p in sorted(d.glob("*_analysis.json")))
+    print(f"[recompute] {n} analysis records updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Serving driver: continuous batching with TWA-semaphore FCFS admission
+over a real (reduced) model — the paper's technique as the first-class
+scheduler of an inference engine.
+
+    python -m repro.launch.serve --arch qwen2-0.5b --requests 24 --slots 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import get_smoke_config
+from ..models.transformer import decode_step, init_caches, init_params, prefill
+from ..serving.scheduler import ContinuousBatchingEngine, Request
+
+
+class ModelServer:
+    """Slot-synchronous batched decode over a reduced config."""
+
+    def __init__(self, arch: str, n_slots: int, max_len: int = 128, seed: int = 0):
+        self.cfg = get_smoke_config(arch)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.params = init_params(jax.random.PRNGKey(seed), self.cfg)
+        self.caches = init_caches(self.cfg, n_slots, max_len, jnp.float32)
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self.positions = np.zeros((n_slots, 1), np.int32)
+        self.row_pos = np.zeros((n_slots,), np.int32)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, self.cfg, t, pos, c)
+        )
+
+    def prefill_request(self, req: Request):
+        """Row prefill: replay the prompt through decode steps (row-isolated
+        caches make per-row prefill exact; a production engine would batch
+        prefills — see DESIGN.md §serving)."""
+        slot = req.slot
+        for i, tok in enumerate(req.prompt):
+            self.tokens[slot, 0] = tok
+            self.positions[slot, 0] = i
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(self.tokens), jnp.asarray(self.positions),
+                self.caches)
+        self.row_pos[slot] = len(req.prompt)
+        req._last_logits = np.asarray(logits[slot])
+
+    def step_fn(self, active_reqs):
+        for r in active_reqs:
+            slot = r.slot
+            self.tokens[slot, 0] = r.out_tokens[-1] if r.out_tokens else r.prompt[-1]
+            self.positions[slot, 0] = self.row_pos[slot]
+            self.row_pos[slot] += 1
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), jnp.asarray(self.positions), self.caches)
+        return np.asarray(logits)[[r.slot for r in active_reqs]]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    server = ModelServer(args.arch, args.slots)
+    engine = ContinuousBatchingEngine(
+        server.step_fn, server.prefill_request, args.slots)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(rid=i, prompt=list(rng.integers(1, server.cfg.vocab, args.prompt_len)),
+                max_new_tokens=args.max_new)
+        for i in range(args.requests)
+    ]
+    engine.submit_batch(reqs)
+    print(f"[serve] {args.requests} requests, {args.slots} slots, "
+          f"queue_depth={engine.telemetry()['queue_depth']}")
+
+    t0 = time.time()
+    steps = 0
+    sample = lambda lg: lg.argmax(-1)
+    while engine.stats.finished < args.requests and steps < 10_000:
+        engine.step(sample)
+        steps += 1
+    dt = time.time() - t0
+    tel = engine.telemetry()
+    tok = sum(len(r.out_tokens) for r in reqs)
+    waits = [r.admit_t - r.enqueue_t for r in reqs]
+    order_ok = all(
+        reqs[i].admit_t <= reqs[j].admit_t + 1e-6
+        for i in range(len(reqs)) for j in range(i + 1, len(reqs))
+    )
+    print(f"[serve] finished={engine.stats.finished} steps={steps} "
+          f"tokens={tok} ({tok / dt:.1f} tok/s) fcfs={order_ok}")
+    print(f"[serve] TWA scheduler: re-examined={tel['stats']['backlog_scans']} "
+          f"skipped={tel['stats']['backlog_skipped']} "
+          f"(skip ratio {tel['stats']['backlog_skipped'] / max(1, tel['stats']['backlog_skipped'] + tel['stats']['backlog_scans']):.2f})")
+    return engine
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Temporal mixing block: x → {gate branch, recurrent branch}; recurrent branch
+passes through a width-4 causal conv then the Real-Gated Linear Recurrent
+Unit:
+
+    r_t = σ(W_a x_t + b_a)                (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                (input gate)
+    a_t = exp(c · softplus(Λ) · (-r_t))   (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is *linear* in h ⇒ computed with `jax.lax.associative_scan`
+(log-depth — the TPU-friendly form), unlike the nonlinear xLSTM cells which
+must time-scan.  Decode is the single-step transition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cache import make_rglru_state
+from .layers import rms_norm
+from .xlstm import _causal_conv1d
+
+_C = 8.0  # paper's fixed decay sharpening constant
+
+
+def init_rglru_block(key, d_model, lru_width, dtype):
+    ks = jax.random.split(key, 7)
+    std = d_model**-0.5
+    stdl = lru_width**-0.5
+    # Λ init so that a^(1/c) ∈ [0.9, 0.999] (paper's init)
+    u = jax.random.uniform(ks[0], (lru_width,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "w_y": (jax.random.normal(ks[1], (d_model, lru_width)) * std).astype(dtype),  # gate branch
+        "w_x": (jax.random.normal(ks[2], (d_model, lru_width)) * std).astype(dtype),  # recurrent branch
+        "conv": (jax.random.normal(ks[3], (4, lru_width)) * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[4], (lru_width, lru_width)) * stdl).astype(dtype),
+        "b_a": jnp.zeros((lru_width,), dtype),
+        "w_i": (jax.random.normal(ks[5], (lru_width, lru_width)) * stdl).astype(dtype),
+        "b_i": jnp.zeros((lru_width,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (lru_width, d_model)) * stdl).astype(dtype),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: (B,S,W) conv'd branch → (a, b) with h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_a"]).astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"]).astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1-a²) with a clamp for numerical safety at a→1
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = mult * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block_forward(p, x, state=None):
+    """x: (B,S,D) → (x + out, new_state). Residual applied inside."""
+    B, S, D = x.shape
+    xn = rms_norm(x, p["ln"], plus_one=True)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_y"]))
+    u = jnp.einsum("bsd,dw->bsw", xn, p["w_x"])
+    if state is None:
+        state = make_rglru_state(B, u.shape[-1])
+    u, conv_tail = _causal_conv1d(u, p["conv"], state["conv"])
+    a, b = _rglru_coeffs(p, u)
+    # prepend carried state: h_t = a_t h_{t-1} + b_t  via associative scan
+    # over pairs (a, b): (a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2)
+    a0 = jnp.concatenate([jnp.ones((B, 1, a.shape[-1]), a.dtype), a], axis=1)
+    b0 = jnp.concatenate([state["h"][:, None, :].astype(a.dtype), b], axis=1)
+
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
+        return al * ar, bl * ar + br
+
+    aa, hh = jax.lax.associative_scan(combine, (a0, b0), axis=1)
+    h = hh[:, 1:, :]  # drop the injected initial state row
+    new_state = {"h": h[:, -1, :], "conv": conv_tail}
+    out = jnp.einsum("bsw,wd->bsd", (h * gate.astype(jnp.float32)).astype(x.dtype), p["w_out"])
+    return x + out, new_state
+
+
+def rglru_block_step(p, x, state):
+    """Single decode step. x: (B,1,D). Exact (conv tail carried in state)."""
+    xn = rms_norm(x, p["ln"], plus_one=True)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_y"]))
+    u = jnp.einsum("bsd,dw->bsw", xn, p["w_x"])
+    u, conv_tail = _causal_conv1d(u, p["conv"], state["conv"])
+    a, b = _rglru_coeffs(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = jnp.einsum("bw,wd->bd", (h * gate[:, 0].astype(jnp.float32)).astype(x.dtype), p["w_out"])
+    return x + out[:, None, :], {"h": h, "conv": conv_tail}

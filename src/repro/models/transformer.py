@@ -1,0 +1,444 @@
+"""Unified decoder stack over heterogeneous blocks.
+
+A model is ``prefix + unit×num_units + suffix`` of blocks (configs/base.py).
+The repeating unit is lax.scan'ed with stacked parameters → HLO size is O(1)
+in depth (essential for 80-layer models on the 512-device dry-run) and the
+scan body is remat'ed (selective activation checkpointing).
+
+Modes (static):
+  train    — full-sequence forward, no caches, chunked-CE loss
+  prefill  — full-sequence forward, writes KV caches / recurrent states
+  decode   — one token per row against the caches
+
+Frontend stubs (per assignment): "audio" consumes precomputed frame
+embeddings (B,S,D); "vision" prepends precomputed patch embeddings (B,P,D)
+to the token embeddings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import Block, ModelConfig
+from ..parallel.sharding import constrain
+from .cache import (
+    kv_cache_append,
+    kv_cache_write_prefill,
+    make_kv_cache,
+    make_mlstm_state,
+    make_rglru_state,
+    make_slstm_state,
+)
+from .layers import (
+    MLP_FWD,
+    MLP_INIT,
+    attn_output,
+    blockwise_attention,
+    init_attention,
+    init_embedding,
+    init_rms_norm,
+    qkv_project,
+    rms_norm,
+    single_query_attention,
+)
+from .moe import init_moe, moe_forward
+from .rglru import init_rglru_block, rglru_block_forward, rglru_block_step
+from .xlstm import init_mlstm, init_slstm, mlstm_forward, slstm_forward
+
+ZERO_AUX = {"lb_loss": 0.0, "z_loss": 0.0, "overflow_frac": 0.0}
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+# ------------------------------------------------------------------ init ----
+
+
+def init_block(key, spec: Block, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    if spec.kind in ("attn", "moe"):
+        ks = jax.random.split(key, 2)
+        p = {
+            "ln1": init_rms_norm(d, dtype, cfg.norm_plus_one),
+            "attn": init_attention(
+                ks[0],
+                dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, qkv_bias=cfg.qkv_bias),
+                d,
+                dtype,
+            ),
+            "ln2": init_rms_norm(d, dtype, cfg.norm_plus_one),
+        }
+        if cfg.sandwich_norms:
+            p["ln1b"] = init_rms_norm(d, dtype, cfg.norm_plus_one)
+            p["ln2b"] = init_rms_norm(d, dtype, cfg.norm_plus_one)
+        if spec.kind == "attn":
+            p["mlp"] = MLP_INIT[cfg.mlp_kind](ks[1], d, cfg.d_ff, dtype)
+        else:
+            p["moe"] = init_moe(
+                ks[1], d, cfg.n_experts, cfg.d_expert, cfg.top_k, cfg.n_shared, cfg.d_shared,
+                dtype, n_experts_pad=cfg.n_experts_pad,
+            )
+        return p
+    if spec.kind == "mlstm":
+        return init_mlstm(key, d, cfg.xlstm_heads, dtype)
+    if spec.kind == "slstm":
+        return init_slstm(key, d, cfg.xlstm_heads, dtype)
+    if spec.kind == "rglru":
+        k1, k2 = jax.random.split(key)
+        return {
+            "temporal": init_rglru_block(k1, d, cfg.lru_width, dtype),
+            "ln2": init_rms_norm(d, dtype, cfg.norm_plus_one),
+            "mlp": MLP_INIT[cfg.mlp_kind](k2, d, cfg.d_ff, dtype),
+        }
+    raise ValueError(f"unknown block kind {spec.kind}")
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    params = {
+        "embed": init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_ln": init_rms_norm(cfg.d_model, dtype, cfg.norm_plus_one),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * cfg.d_model**-0.5
+        ).astype(dtype)
+
+    def init_unit(k):
+        ks = jax.random.split(k, max(1, len(cfg.unit)))
+        return {f"b{i}": init_block(ks[i], spec, cfg, dtype) for i, spec in enumerate(cfg.unit)}
+
+    if cfg.num_units > 0:
+        params["units"] = jax.vmap(init_unit)(jax.random.split(keys[2], cfg.num_units))
+    for name, blocks, k in (("prefix", cfg.prefix, keys[3]), ("suffix", cfg.suffix, keys[4])):
+        if blocks:
+            ks = jax.random.split(k, len(blocks))
+            params[name] = [init_block(ks[i], spec, cfg, dtype) for i, spec in enumerate(blocks)]
+    return params
+
+
+# ---------------------------------------------------------------- caches ----
+
+
+def init_block_cache(spec: Block, cfg: ModelConfig, batch: int, capacity: int, dtype):
+    if spec.kind in ("attn", "moe"):
+        cap = min(capacity, spec.window) if spec.window > 0 else capacity
+        return make_kv_cache(batch, cap, cfg.n_kv_heads, cfg.hd, dtype)
+    if spec.kind == "mlstm":
+        d_in = 2 * cfg.d_model
+        hd = d_in // cfg.xlstm_heads
+        return make_mlstm_state(batch, cfg.xlstm_heads, hd, hd, d_in)
+    if spec.kind == "slstm":
+        return make_slstm_state(batch, cfg.xlstm_heads, cfg.d_model // cfg.xlstm_heads)
+    if spec.kind == "rglru":
+        return make_rglru_state(batch, cfg.lru_width)
+    raise ValueError(spec.kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    caches = {}
+    if cfg.num_units > 0:
+
+        def one(spec):
+            return init_block_cache(spec, cfg, batch, capacity, dtype)
+
+        unit_cache = {f"b{i}": one(spec) for i, spec in enumerate(cfg.unit)}
+        caches["units"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_units,) + x.shape), unit_cache
+        )
+    for name, blocks in (("prefix", cfg.prefix), ("suffix", cfg.suffix)):
+        if blocks:
+            caches[name] = [init_block_cache(s, cfg, batch, capacity, dtype) for s in blocks]
+    return caches
+
+
+# --------------------------------------------------------------- forward ----
+
+
+def block_forward(spec: Block, cfg: ModelConfig, p, x, positions, cache, mode: str,
+                  kv_block: int = 1024):
+    """Returns (x', new_cache, aux). Residuals are applied inside."""
+    aux = dict(ZERO_AUX)
+    if spec.kind in ("attn", "moe"):
+        theta = spec.rope_theta or cfg.rope_theta
+        xn = rms_norm(x, p["ln1"], plus_one=cfg.norm_plus_one)
+        q, k, v = qkv_project(p["attn"], xn, positions, theta)
+        q = constrain(q, "batch", "seq", "heads")
+        new_cache = cache
+        if mode == "train":
+            ctx = blockwise_attention(q, k, v, positions, positions, window=spec.window,
+                                      kv_block=kv_block)
+        elif mode == "prefill":
+            ctx = blockwise_attention(q, k, v, positions, positions, window=spec.window,
+                                      kv_block=kv_block)
+            new_cache = kv_cache_write_prefill(cache, k, v, positions)
+        else:  # decode — dense single-query path (scan-free; with the cache
+            # sequence sharded over `model` the partitioner emits the
+            # flash-decode LSE-merge all-reduces)
+            new_cache = kv_cache_append(cache, k, v, positions)
+            ctx = single_query_attention(
+                q, new_cache["k"], new_cache["v"], positions, new_cache["pos"], window=spec.window
+            )
+        attn_out = attn_output(p["attn"], ctx)
+        if cfg.sandwich_norms:
+            attn_out = rms_norm(attn_out, p["ln1b"], plus_one=cfg.norm_plus_one)
+        x = x + attn_out
+        xn2 = rms_norm(x, p["ln2"], plus_one=cfg.norm_plus_one)
+        if spec.kind == "attn":
+            ff = MLP_FWD[cfg.mlp_kind](p["mlp"], xn2)
+        else:
+            ff, aux = moe_forward(
+                p["moe"], xn2, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor
+            )
+            aux = dict(ZERO_AUX, **aux)
+        if cfg.sandwich_norms:
+            ff = rms_norm(ff, p["ln2b"], plus_one=cfg.norm_plus_one)
+        return x + ff, new_cache, aux
+    if spec.kind == "mlstm":
+        x, st = mlstm_forward(p, x, cfg.xlstm_heads, cache)
+        return x, st, aux
+    if spec.kind == "slstm":
+        x, st = slstm_forward(p, x, cfg.xlstm_heads, cache)
+        return x, st, aux
+    if spec.kind == "rglru":
+        if mode == "decode":
+            x, st = rglru_block_step(p["temporal"], x, cache)
+        else:
+            x, st = rglru_block_forward(p["temporal"], x, cache)
+        xn = rms_norm(x, p["ln2"], plus_one=cfg.norm_plus_one)
+        return x + MLP_FWD[cfg.mlp_kind](p["mlp"], xn), st, aux
+    raise ValueError(spec.kind)
+
+
+def _apply_unit(cfg, unit_params, x, positions, unit_cache, mode, kv_block=1024):
+    aux_sum = dict(ZERO_AUX)
+    new_caches = {}
+    for i, spec in enumerate(cfg.unit):
+        cache_i = None if unit_cache is None else unit_cache[f"b{i}"]
+        x, nc, aux = block_forward(spec, cfg, unit_params[f"b{i}"], x, positions, cache_i, mode,
+                                   kv_block=kv_block)
+        new_caches[f"b{i}"] = nc
+        aux_sum = _add_aux(aux_sum, aux)
+    return x, new_caches, aux_sum
+
+
+_REMAT_POLICIES = {
+    "full": None,  # save only per-unit inputs (max recompute, min memory)
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _group_size(u: int) -> int:
+    """Largest divisor of u that is ≤ ceil(sqrt(u)) (√L checkpointing)."""
+    import math as _m
+
+    target = _m.isqrt(u) + (0 if _m.isqrt(u) ** 2 == u else 1)
+    for g in range(target, 0, -1):
+        if u % g == 0:
+            return g
+    return 1
+
+
+def forward_hidden(params, cfg: ModelConfig, x, positions, caches=None, mode="train",
+                   remat="dots", unroll_units: bool = False, kv_block: int = 1024):
+    """x: (B,S,D) input embeddings → (h, new_caches, aux).
+
+    ``unroll_units`` unrolls the layer scan (dry-run analysis lowering only:
+    while-loop bodies are counted once by XLA cost analysis, so the roofline
+    lowering unrolls every static-trip-count loop)."""
+    aux_total = dict(ZERO_AUX)
+    new_caches = {"prefix": [], "suffix": []} if caches is not None else None
+
+    for i, spec in enumerate(cfg.prefix):
+        c = caches["prefix"][i] if caches is not None else None
+        x, nc, aux = block_forward(spec, cfg, params["prefix"][i], x, positions, c, mode,
+                                   kv_block=kv_block)
+        aux_total = _add_aux(aux_total, aux)
+        if caches is not None:
+            new_caches["prefix"].append(nc)
+
+    if cfg.num_units > 0:
+        unroll = cfg.num_units if unroll_units else 1
+        if caches is None:
+
+            def unit_fn(xc, up):
+                xo, _, aux = _apply_unit(cfg, up, xc, positions, None, mode, kv_block)
+                return xo, aux
+
+            if remat == "2level" and mode == "train" and not unroll_units:
+                # nested (√L) activation checkpointing: scan over unit GROUPS
+                # (outer checkpoint saves one carry per group) with a
+                # checkpointed per-unit scan inside (backward re-runs one
+                # group, then re-runs one unit at a time).  Saved activations
+                # drop from U·|x| to (U/g + g)·|x| for ~2 extra fwd passes.
+                U = cfg.num_units
+                g = _group_size(U)
+                inner = jax.checkpoint(unit_fn)
+
+                @jax.checkpoint
+                def group_fn(xc, gp):
+                    return jax.lax.scan(inner, xc, gp)
+
+                grouped = jax.tree.map(
+                    lambda a: a.reshape((U // g, g) + a.shape[1:]), params["units"]
+                )
+                x, auxs = jax.lax.scan(group_fn, x, grouped)
+            else:
+                if remat in _REMAT_POLICIES and mode == "train":
+                    pol = _REMAT_POLICIES[remat]
+                    unit_fn = jax.checkpoint(
+                        unit_fn, policy=getattr(jax.checkpoint_policies, pol) if pol else None
+                    )
+                x, auxs = jax.lax.scan(unit_fn, x, params["units"], unroll=unroll)
+            aux_total = _add_aux(aux_total, jax.tree.map(jnp.sum, auxs))
+        else:
+
+            def unit_fn_c(xc, inp):
+                up, uc = inp
+                xo, ncs, aux = _apply_unit(cfg, up, xc, positions, uc, mode, kv_block)
+                return xo, (ncs, aux)
+
+            x, (ncs, auxs) = jax.lax.scan(unit_fn_c, x, (params["units"], caches["units"]),
+                                          unroll=unroll)
+            new_caches["units"] = ncs
+            aux_total = _add_aux(aux_total, jax.tree.map(jnp.sum, auxs))
+
+    for i, spec in enumerate(cfg.suffix):
+        c = caches["suffix"][i] if caches is not None else None
+        x, nc, aux = block_forward(spec, cfg, params["suffix"][i], x, positions, c, mode,
+                                   kv_block=kv_block)
+        aux_total = _add_aux(aux_total, aux)
+        if caches is not None:
+            new_caches["suffix"].append(nc)
+
+    h = rms_norm(x, params["final_ln"], plus_one=cfg.norm_plus_one)
+    if new_caches is not None:
+        new_caches = {k: v for k, v in new_caches.items() if v != []}
+    return h, new_caches, aux_total
+
+
+# ------------------------------------------------------------ embeddings ----
+
+
+def embed_inputs(params, cfg: ModelConfig, batch):
+    """Assemble input embeddings + positions + loss mask from a batch dict."""
+    if cfg.frontend == "audio":
+        x = batch["frame_embeds"]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        mask = jnp.ones((B, S), jnp.float32)
+    elif cfg.frontend == "vision":
+        tok = params["embed"][batch["tokens"]]
+        x = jnp.concatenate([batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        P = batch["patch_embeds"].shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((B, P), jnp.float32), jnp.ones((B, S - P), jnp.float32)], axis=1
+        )
+    else:
+        x = params["embed"][batch["tokens"]]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        mask = jnp.ones((B, S), jnp.float32)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x, positions, mask
+
+
+def lm_head(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+# ----------------------------------------------------------------- loss ----
+
+
+def chunked_ce_loss(h, head, labels, mask, chunk: int = 512, z_weight: float = 0.0):
+    """Cross-entropy without materializing (B,S,V) logits: scan over sequence
+    chunks; fp32 statistics; vocab dim stays sharded (`vocab` → model axis)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nch = S // chunk
+
+    # checkpointed body: backward recomputes each chunk's logits from h
+    # instead of storing (B, S, V) residuals across the scan.
+    @jax.checkpoint
+    def body(carry, i):
+        loss_sum, z_sum, cnt = carry
+        hs = jax.lax.dynamic_slice(h, (0, i * chunk, 0), (B, chunk, D))
+        lab = jax.lax.dynamic_slice(labels, (0, i * chunk), (B, chunk))
+        msk = jax.lax.dynamic_slice(mask, (0, i * chunk), (B, chunk))
+        logits = jnp.einsum("bsd,dv->bsv", hs, head.astype(hs.dtype)).astype(jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum((lse - ll) * msk)
+        z_sum = z_sum + jnp.sum(lse**2 * msk)
+        return (loss_sum, z_sum, cnt + jnp.sum(msk)), None
+
+    if nch == 1:
+        (loss_sum, z_sum, cnt), _ = body(
+            (jnp.float32(0), jnp.float32(0), jnp.float32(0)), jnp.int32(0)
+        )
+    else:
+        (loss_sum, z_sum, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), jnp.arange(nch)
+        )
+    cnt = jnp.maximum(cnt, 1.0)
+    return loss_sum / cnt + z_weight * z_sum / cnt, cnt
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat="dots", unroll_units=False,
+               kv_block: int = 1024, ce_chunk: int = 512):
+    """Full training objective: chunked CE + MoE aux losses. Returns
+    (loss, metrics)."""
+    x, positions, mask = embed_inputs(params, cfg, batch)
+    h, _, aux = forward_hidden(params, cfg, x, positions, None, "train", remat=remat,
+                               unroll_units=unroll_units, kv_block=kv_block)
+    ce, cnt = chunked_ce_loss(h, lm_head(params, cfg), batch["labels"], mask,
+                              chunk=ce_chunk, z_weight=cfg.z_loss_weight)
+    n_moe = max(1, sum(1 for b in cfg.blocks if b.kind == "moe"))
+    lb = aux["lb_loss"] / n_moe
+    loss = ce + 0.01 * lb + aux["z_loss"] / n_moe
+    metrics = {
+        "ce": ce,
+        "lb_loss": lb,
+        "router_z": aux["z_loss"] / n_moe,
+        "overflow_frac": aux["overflow_frac"] / n_moe,
+        "tokens": cnt,
+    }
+    return loss, metrics
+
+
+# ---------------------------------------------------------------- serving ---
+
+
+def prefill(params, cfg: ModelConfig, batch, caches, unroll_units=False, kv_block: int = 1024):
+    """Full-context forward that fills caches; returns (last-pos logits, caches)."""
+    x, positions, _ = embed_inputs(params, cfg, batch)
+    h, caches, _ = forward_hidden(params, cfg, x, positions, caches, "prefill", remat="none",
+                                  unroll_units=unroll_units, kv_block=kv_block)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :], lm_head(params, cfg).astype(h.dtype))
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, positions, caches, unroll_units=False):
+    """tokens (B,1) int32, positions (B,1) int32 → (logits (B,V) f32, caches)."""
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    h, caches, _ = forward_hidden(params, cfg, x, positions, caches, "decode", remat="none",
+                                  unroll_units=unroll_units)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :], lm_head(params, cfg).astype(h.dtype))
+    return logits.astype(jnp.float32), caches
+
+
+partial  # (linter guard)

@@ -1,0 +1,169 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, exponential gating with stabilizer).
+
+Both cells are expressed as a single-step transition plus a lax.scan over
+time for train/prefill; decode reuses the single step with the carried
+state.  Simplifications vs the reference CUDA implementation (noted per the
+"unverified" config tier): causal-conv pre-activation on the q/k branch is a
+width-4 depthwise conv; block up/down projections follow the paper's factors
+(mLSTM pf=2, sLSTM pf=4/3); recurrent gate contributions in sLSTM are
+block-diagonal per head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cache import make_mlstm_state, make_slstm_state
+from .layers import rms_norm
+
+
+def _causal_conv1d(x, w, tail=None):
+    """Depthwise causal conv. x: (B,S,D), w: (K,D); ``tail`` carries the
+    last K-1 inputs from previous chunks/steps (zeros at sequence start).
+    Returns (out, new_tail) — the tail makes chunked prefill and one-token
+    decode produce exactly the full-sequence result."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out, xp[:, xp.shape[1] - (K - 1) :, :]
+
+
+# ------------------------------------------------------------------ mLSTM ---
+
+
+def init_mlstm(key, d_model, n_heads, dtype):
+    """mLSTM block: pre-LN → up-proj (pf=2) → (conv branch → q,k; v) →
+    mLSTM cell → gated skip → down-proj."""
+    d_in = 2 * d_model  # up-projected width
+    hd = d_in // n_heads
+    ks = jax.random.split(key, 8)
+    std = d_model**-0.5
+    stdi = d_in**-0.5
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "w_up": (jax.random.normal(ks[0], (d_model, d_in)) * std).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d_model, d_in)) * std).astype(dtype),
+        "conv": (jax.random.normal(ks[2], (4, d_in)) * 0.1).astype(dtype),
+        "wq": (jax.random.normal(ks[3], (d_in, n_heads, hd)) * stdi).astype(dtype),
+        "wk": (jax.random.normal(ks[4], (d_in, n_heads, hd)) * stdi).astype(dtype),
+        "wv": (jax.random.normal(ks[5], (d_in, n_heads, hd)) * stdi).astype(dtype),
+        "w_if": (jax.random.normal(ks[6], (d_in, n_heads, 2)) * stdi).astype(dtype),
+        "b_if": jnp.tile(jnp.asarray([0.0, 3.0], dtype), (n_heads, 1)),  # forget bias>0
+        "w_down": (jax.random.normal(ks[7], (d_in, d_model)) * stdi).astype(dtype),
+        "out_ln": jnp.ones((d_in,), dtype),
+    }
+
+
+def _mlstm_step(state, q, k, v, i_gate, f_gate):
+    """One time step. q/k/v: (B,H,hd); i/f gates: (B,H) pre-activations."""
+    logf = -jax.nn.softplus(-f_gate)  # log sigmoid(f)
+    m_new = jnp.maximum(logf + state["m"], i_gate)
+    i_ = jnp.exp(i_gate - m_new)
+    f_ = jnp.exp(logf + state["m"] - m_new)
+    C = f_[..., None, None] * state["C"] + i_[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f_[..., None] * state["n"] + i_[..., None] * k
+    h_num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    h = h_num / h_den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_forward(p, x, n_heads, state=None):
+    """x: (B,S,D). Returns (out (B,S,D), new_state)."""
+    B, S, D = x.shape
+    xn = rms_norm(x, p["ln"])
+    up = jnp.einsum("bsd,de->bse", xn, p["w_up"])
+    gate = jnp.einsum("bsd,de->bse", xn, p["w_gate"])
+    d_in = up.shape[-1]
+    if state is None:
+        state = make_mlstm_state(B, n_heads, d_in // n_heads, d_in // n_heads, d_in)
+    conv, conv_tail = _causal_conv1d(up, p["conv"], state["conv"])
+    conv = jax.nn.silu(conv)
+    q = jnp.einsum("bse,ehk->bshk", conv, p["wq"])
+    k = jnp.einsum("bse,ehk->bshk", conv, p["wk"]) * (p["wq"].shape[-1] ** -0.5)
+    v = jnp.einsum("bse,ehk->bshk", up, p["wv"])
+    gates = jnp.einsum("bse,ehg->bshg", up, p["w_if"]) + p["b_if"].astype(jnp.float32)
+    i_g, f_g = gates[..., 0].astype(jnp.float32), gates[..., 1].astype(jnp.float32)
+
+    def body(st, inp):
+        qt, kt, vt, it, ft = inp
+        st, h = _mlstm_step(st, qt.astype(jnp.float32), kt.astype(jnp.float32), vt.astype(jnp.float32), it, ft)
+        return st, h
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_g.transpose(1, 0, 2),
+        f_g.transpose(1, 0, 2),
+    )
+    cell_state = {k_: state[k_] for k_ in ("C", "n", "m")}
+    cell_state, hs = jax.lax.scan(body, cell_state, xs)
+    state = dict(cell_state, conv=conv_tail)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, -1).astype(x.dtype)  # (B,S,d_in)
+    h = rms_norm(h, p["out_ln"]) * jax.nn.silu(gate)
+    return x + jnp.einsum("bse,ed->bsd", h, p["w_down"]), state  # residual inside
+
+
+# ------------------------------------------------------------------ sLSTM ---
+
+
+def init_slstm(key, d_model, n_heads, dtype):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    std = d_model**-0.5
+    d_ff = int(d_model * 4 / 3)
+    return {
+        "ln": jnp.ones((d_model,), dtype),
+        "w_zifo": (jax.random.normal(ks[0], (d_model, n_heads, 4 * hd)) * std).astype(dtype),
+        "r_zifo": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd)) * hd**-0.5).astype(dtype),
+        "b_zifo": jnp.zeros((n_heads, 4 * hd), dtype),
+        "w_out": (jax.random.normal(ks[2], (d_model, d_model)) * std).astype(dtype),
+        "ffn_ln": jnp.ones((d_model,), dtype),
+        "ffn_wi": (jax.random.normal(ks[3], (d_model, d_ff)) * std).astype(dtype),
+        "ffn_wg": (jax.random.normal(ks[4], (d_model, d_ff)) * std).astype(dtype),
+        "ffn_wo": (jax.random.normal(ks[5], (d_ff, d_model)) * d_ff**-0.5).astype(dtype),
+    }
+
+
+def _slstm_step(p, state, zifo_x):
+    """zifo_x: (B,H,4*hd) input pre-activations; recurrent term added here."""
+    hd = state["h"].shape[-1]
+    rec = jnp.einsum("bhk,hkg->bhg", state["h"].astype(zifo_x.dtype), p["r_zifo"].astype(zifo_x.dtype))
+    z, i, f, o = jnp.split((zifo_x + rec).astype(jnp.float32), 4, axis=-1)
+    logf = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(logf + state["m"], i)
+    i_ = jnp.exp(i - m_new)
+    f_ = jnp.exp(logf + state["m"] - m_new)
+    c = f_ * state["c"] + i_ * jnp.tanh(z)
+    n = f_ * state["n"] + i_
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p, x, n_heads, state=None):
+    B, S, D = x.shape
+    hd = D // n_heads
+    xn = rms_norm(x, p["ln"])
+    zifo = jnp.einsum("bsd,dhg->bshg", xn, p["w_zifo"]) + p["b_zifo"]
+    if state is None:
+        state = make_slstm_state(B, n_heads, hd)
+
+    def body(st, inp):
+        st = _slstm_step(p, st, inp)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(body, state, zifo.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["w_out"])
+    y = x + out  # residual inside
+    # post FFN (pf = 4/3 SwiGLU), part of the sLSTM block per the paper
+    yn = rms_norm(y, p["ffn_ln"])
+    ff = jax.nn.silu(jnp.einsum("bsd,df->bsf", yn, p["ffn_wg"])) * jnp.einsum("bsd,df->bsf", yn, p["ffn_wi"])
+    return y + jnp.einsum("bsf,fd->bsd", ff, p["ffn_wo"]), state

@@ -1,0 +1,102 @@
+"""AdamW with the distributed-training substrate features:
+
+  * fp32 master weights + moments, bf16 working params (mixed precision);
+  * ZeRO-1: the *optimizer state* shardings add a "zero" (data/pod) dimension
+    on top of the parameter TP sharding — derived in parallel/sharding.py,
+    applied by the step factory via with_sharding_constraint;
+  * global-norm clipping computed in fp32;
+  * linear-warmup cosine schedule;
+  * optional int8 error-feedback gradient compression (for the scarce
+    inter-pod links — see compression.py).
+
+Pure functional: state is a pytree, `update` is jit-safe.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # int32
+    mu: dict  # first moment,  fp32, like params
+    nu: dict  # second moment, fp32, like params
+    master: dict  # fp32 master copy of params
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt: OptState, param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_opt_state, metrics). grads in any dtype
+    (accumulated fp32 upstream); decoupled weight decay on master weights."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = opt.step + 1
+    lr = schedule(cfg, opt.step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    # bias correction
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        # decoupled weight decay — skipped for norms/biases (ndim ≤ 1)
+        wd = cfg.weight_decay if w.ndim > 1 else 0.0
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * w)
+        return m, v, w
+
+    # explicit flatten (tuples are pytree nodes — tree.map with a
+    # tuple-returning fn would splice them into the tree)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree.leaves(opt.mu)
+    flat_v = jax.tree.leaves(opt.nu)
+    flat_w = jax.tree.leaves(opt.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = tdef.unflatten([o[0] for o in out])
+    nu = tdef.unflatten([o[1] for o in out])
+    master = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    new_opt = OptState(step=step, mu=mu, nu=nu, master=master)
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

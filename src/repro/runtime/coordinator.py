@@ -1,0 +1,221 @@
+"""Cluster control plane (L3 of the paper's adaptation).
+
+At thousands of hosts, the coordination hot-spots are the distributed
+analogue of the paper's contended `Grant` word: a checkpoint-write token, a
+barrier generation counter, an elastic membership epoch.  We structure every
+one of them as a (ticket, grant) pair on the coordinator KV store and have
+hosts wait on *hashed bucket keys* instead of the grant key:
+
+  * polling hosts disperse across buckets (no thundering-herd reads of one
+    key — the KV-store equivalent of coherence storms);
+  * the releaser pokes exactly the successor's bucket (plus the benaphore
+    fast-path skip when nobody can be waiting);
+  * `ticket − grant` per resource is the built-in queue-depth telemetry that
+    feeds straggler detection.
+
+The KV store here is in-process (this box is single-host); the interface is
+the same one an etcd/redis deployment would implement — tests simulate many
+hosts as threads against it, which exercises every code path except network
+latency.
+
+Fault-tolerance machinery:
+  * heartbeats with configurable timeout → failure detection;
+  * barrier with failure awareness (dead hosts are excluded from the count
+    rather than hanging the barrier);
+  * straggler detection from per-step duration EWMA + semaphore queue depth;
+  * elastic epochs: join/leave bumps the membership epoch; the training
+    driver re-builds its mesh and re-shards from the last checkpoint
+    (runtime/elastic.py).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from ..core.atomics import AtomicU64
+from ..core.hashfn import index_for, twa_hash
+from ..core.twa_semaphore import TWASemaphore
+
+
+class KVStore:
+    """In-process stand-in for the coordinator store (etcd-like watch API)."""
+
+    def __init__(self):
+        self._data: dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+
+    def incr(self, key: str, by: int = 1) -> int:
+        with self._cond:
+            old = self._data.get(key, 0)
+            self._data[key] = old + by
+            self._cond.notify_all()
+            return old
+
+    def get(self, key: str) -> int:
+        with self._lock:
+            return self._data.get(key, 0)
+
+    def wait_change(self, key: str, observed: int, timeout: float = 5.0) -> int:
+        with self._cond:
+            deadline = time.time() + timeout
+            while self._data.get(key, 0) == observed:
+                left = deadline - time.time()
+                if left <= 0:
+                    break
+                self._cond.wait(left)
+            return self._data.get(key, 0)
+
+
+class DistributedTicketLease:
+    """Ticket/grant resource on the KV store with TWA bucket waiting.
+
+    acquire(): take a ticket; wait until grant reaches it — polling ONLY our
+    hashed bucket key (kv:`bucket/<i>`), which the releaser pokes.
+    release(): advance grant, poke the successor's bucket (benaphore skip
+    when the distance shows no waiters).
+    """
+
+    BUCKETS = 64
+
+    def __init__(self, kv: KVStore, name: str, capacity: int = 1,
+                 long_term_threshold: int = 1):
+        self.kv = kv
+        self.name = name
+        self.threshold = long_term_threshold
+        self._salt = index_for(hash(name), 1 << 31)
+        if kv.incr(f"{name}/init", 0) == 0 and kv.incr(f"{name}/init") == 0:
+            kv.incr(f"{name}/grant", capacity)
+
+    def _bucket_key(self, ticket: int) -> str:
+        return f"{self.name}/bucket/{index_for(twa_hash(self._salt, ticket), self.BUCKETS)}"
+
+    def acquire(self, timeout: float = 30.0) -> int:
+        ticket = self.kv.incr(f"{self.name}/ticket")
+        deadline = time.time() + timeout
+        bucket = self._bucket_key(ticket)
+        observed = self.kv.get(bucket)
+        while True:
+            grant = self.kv.get(f"{self.name}/grant")
+            if grant - ticket > 0:
+                return ticket
+            if time.time() > deadline:
+                raise TimeoutError(f"lease {self.name}: ticket {ticket} vs grant {grant}")
+            if grant + self.threshold - ticket > 0:
+                # near the head: short-term wait directly on grant
+                self.kv.wait_change(f"{self.name}/grant", grant, timeout=0.05)
+            else:
+                # far: semi-local wait on our hashed bucket
+                observed = self.kv.wait_change(bucket, observed, timeout=0.25)
+
+    def release(self) -> None:
+        grant = self.kv.incr(f"{self.name}/grant") + 1
+        g = grant + self.threshold
+        ticket = self.kv.get(f"{self.name}/ticket")
+        if g - ticket >= 0:
+            return  # benaphore fast path: nobody long-term waiting
+        self.kv.incr(self._bucket_key(g))  # poke successor's successor
+
+    def queue_depth(self) -> int:
+        return max(0, self.kv.get(f"{self.name}/ticket") - self.kv.get(f"{self.name}/grant"))
+
+
+# ------------------------------------------------------------ coordinator ---
+
+
+@dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    step: int = 0
+    step_ewma_s: float = 0.0
+    alive: bool = True
+
+
+@dataclass
+class Coordinator:
+    """Failure detection + barriers + straggler accounting + elastic epochs."""
+
+    heartbeat_timeout: float = 2.0
+    straggler_factor: float = 2.0
+    kv: KVStore = field(default_factory=KVStore)
+
+    def __post_init__(self):
+        self.hosts: dict[int, HostState] = {}
+        self._lock = threading.Lock()
+        self.epoch = 0  # membership epoch — bumped on join/leave/failure
+        self.ckpt_lease = DistributedTicketLease(self.kv, "ckpt-writers", capacity=2)
+
+    # ---- membership -------------------------------------------------------
+    def join(self, host_id: int) -> int:
+        with self._lock:
+            self.hosts[host_id] = HostState(host_id, time.time())
+            self.epoch += 1
+            return self.epoch
+
+    def leave(self, host_id: int) -> int:
+        with self._lock:
+            if host_id in self.hosts:
+                self.hosts[host_id].alive = False
+                self.epoch += 1
+            return self.epoch
+
+    def alive_hosts(self) -> list[int]:
+        with self._lock:
+            return sorted(h.host_id for h in self.hosts.values() if h.alive)
+
+    # ---- heartbeats / failure detection -----------------------------------
+    def heartbeat(self, host_id: int, step: int, step_time_s: float) -> dict:
+        now = time.time()
+        with self._lock:
+            h = self.hosts.get(host_id)
+            if h is None or not h.alive:
+                raise RuntimeError(f"host {host_id} not a member (epoch {self.epoch})")
+            h.last_heartbeat = now
+            h.step = step
+            h.step_ewma_s = (0.7 * h.step_ewma_s + 0.3 * step_time_s
+                             if h.step_ewma_s else step_time_s)
+            return {"epoch": self.epoch}
+
+    def detect_failures(self) -> list[int]:
+        now = time.time()
+        dead = []
+        with self._lock:
+            for h in self.hosts.values():
+                if h.alive and now - h.last_heartbeat > self.heartbeat_timeout:
+                    h.alive = False
+                    dead.append(h.host_id)
+            if dead:
+                self.epoch += 1
+        return dead
+
+    # ---- stragglers --------------------------------------------------------
+    def stragglers(self) -> list[int]:
+        """Hosts whose EWMA step time exceeds straggler_factor × median."""
+        with self._lock:
+            alive = [h for h in self.hosts.values() if h.alive and h.step_ewma_s > 0]
+            if len(alive) < 3:
+                return []
+            times = sorted(h.step_ewma_s for h in alive)
+            med = times[len(times) // 2]
+            return [h.host_id for h in alive if h.step_ewma_s > self.straggler_factor * med]
+
+    # ---- failure-aware barrier ---------------------------------------------
+    def barrier(self, host_id: int, gen: str, timeout: float = 10.0) -> bool:
+        """Generation barrier: waits until every *alive* host arrived.  A
+        host dying mid-barrier shrinks the required count instead of hanging
+        everyone (the arrived-count is compared against the live membership
+        each poll)."""
+        key = f"barrier/{gen}"
+        self.kv.incr(key)
+        deadline = time.time() + timeout
+        observed = -1
+        while time.time() < deadline:
+            arrived = self.kv.get(key)
+            if arrived >= len(self.alive_hosts()):
+                return True
+            self.detect_failures()
+            observed = self.kv.wait_change(key, arrived, timeout=0.05)
+        return False

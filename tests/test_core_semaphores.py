@@ -1,0 +1,228 @@
+"""Paper-fidelity tests for the L1 (host-thread) semaphores — all listings.
+
+Covered claims:
+  * counting-semaphore safety: never more than `count` threads inside;
+  * liveness / no lost wakeups under heavy take/post churn (all waiting modes);
+  * FIFO (first-come-first-enabled) admission for the ticket-based kinds —
+    the paper's central QoI property (pthread-like baseline is *not* FIFO);
+  * post(n) enables exactly n waiters;
+  * benaphore fast-path in TWA post never skips a needed wake;
+  * queue-depth telemetry (grant/ticket distance) monotonicity;
+  * 64-bit wrap-around distance arithmetic.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core import SEMAPHORE_KINDS
+from repro.core.ticket_semaphore import _dist
+from repro.core.twa_semaphore import TWASemaphore, WaitingArray
+
+# Parking/futex-style kinds are safe under the GIL; pure-spin variants also
+# terminate (pause() releases the GIL) but are slow, so stress counts differ.
+KINDS = {
+    "ticket-spin": lambda c=0: SEMAPHORE_KINDS["ticket"](c, waiting="spin"),
+    "ticket-broadcast": lambda c=0: SEMAPHORE_KINDS["ticket"](c, waiting="broadcast"),
+    "twa-spin": lambda c=0: SEMAPHORE_KINDS["twa"](c, waiting="spin"),
+    "twa-futex": lambda c=0: SEMAPHORE_KINDS["twa"](c, waiting="futex"),
+    "twa-chains": lambda c=0: SEMAPHORE_KINDS["twa-chains"](c),
+    "twa-channels": lambda c=0: SEMAPHORE_KINDS["twa-channels"](c),
+    "twa-v3": lambda c=0: SEMAPHORE_KINDS["twa-v3"](c),
+    "pthread": lambda c=0: SEMAPHORE_KINDS["pthread"](c),
+}
+FIFO_KINDS = [k for k in KINDS if k != "pthread"]
+SLOW = {"ticket-spin", "twa-spin"}  # GIL-polling: keep iteration counts low
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+def test_mutual_exclusion_and_liveness(kind):
+    """count=1 semaphore used as a lock by N threads: the shared counter
+    increments race-free and every thread finishes (no lost wakeups)."""
+    sem = KINDS[kind](1)
+    n_threads, iters = (4, 50) if kind in SLOW else (8, 200)
+    shared = {"x": 0, "max_inside": 0, "inside": 0}
+    guard = threading.Lock()
+
+    def worker():
+        for _ in range(iters):
+            sem.take()
+            with guard:
+                shared["inside"] += 1
+                shared["max_inside"] = max(shared["max_inside"], shared["inside"])
+            x = shared["x"]
+            shared["x"] = x + 1
+            with guard:
+                shared["inside"] -= 1
+            sem.post()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+        assert not t.is_alive(), f"{kind}: lost wakeup / deadlock"
+    assert shared["x"] == n_threads * iters
+    assert shared["max_inside"] == 1
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+def test_counting_capacity(kind):
+    """count=K: at most K concurrently inside the critical region."""
+    K = 3
+    sem = KINDS[kind](K)
+    n_threads, iters = (6, 20) if kind in SLOW else (10, 60)
+    inside = {"now": 0, "max": 0}
+    guard = threading.Lock()
+
+    def worker():
+        for _ in range(iters):
+            sem.take()
+            with guard:
+                inside["now"] += 1
+                inside["max"] = max(inside["max"], inside["now"])
+            time.sleep(0)
+            with guard:
+                inside["now"] -= 1
+            sem.post()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    assert 1 <= inside["max"] <= K
+
+
+@pytest.mark.parametrize("kind", FIFO_KINDS)
+def test_fifo_admission(kind):
+    """Ticket-based semaphores admit in arrival (ticket) order.  We serialize
+    arrivals (so ticket order is known), then release one permit at a time
+    and observe completion order == arrival order."""
+    sem = KINDS[kind](0)
+    order = []
+    guard = threading.Lock()
+    started = threading.Semaphore(0)
+
+    def waiter(i):
+        started.release()
+        sem.take()
+        with guard:
+            order.append(i)
+
+    ts = []
+    for i in range(8):
+        t = threading.Thread(target=waiter, args=(i,))
+        ts.append(t)
+        t.start()
+        started.acquire()
+        # Wait until the thread has actually taken its ticket (ticket counter
+        # advanced) so arrival order is deterministic.
+        deadline = time.time() + 10
+        while sem.ticket.load() != i + 1 and time.time() < deadline:
+            time.sleep(0.001)
+        assert sem.ticket.load() == i + 1
+
+    for i in range(8):
+        sem.post()
+        deadline = time.time() + 30
+        while len(order) != i + 1 and time.time() < deadline:
+            time.sleep(0.001)
+        assert order == list(range(i + 1)), f"{kind}: admission out of order: {order}"
+    for t in ts:
+        t.join(timeout=30)
+        assert not t.is_alive()
+
+
+@pytest.mark.parametrize("kind", ["twa-futex", "twa-chains", "twa-channels", "pthread"])
+def test_post_n_enables_n(kind):
+    sem = KINDS[kind](0)
+    done = threading.Semaphore(0)
+
+    def waiter():
+        sem.take()
+        done.release()
+
+    ts = [threading.Thread(target=waiter) for _ in range(6)]
+    for t in ts:
+        t.start()
+    time.sleep(0.05)
+    sem.post(4)
+    for _ in range(4):
+        assert done.acquire(timeout=30)
+    time.sleep(0.1)
+    assert not done.acquire(blocking=False), "post(4) enabled a 5th waiter"
+    sem.post(2)
+    for _ in range(2):
+        assert done.acquire(timeout=30)
+    for t in ts:
+        t.join(timeout=30)
+
+
+def test_benaphore_fast_path_equivalence():
+    """TWA post with and without the racy fast path admits identically."""
+    for fast in (True, False):
+        sem = TWASemaphore(0, waiting="futex", post_fast_path=fast)
+        results = []
+        ts = [threading.Thread(target=lambda: (sem.take(), results.append(1)))
+              for _ in range(5)]
+        for t in ts:
+            t.start()
+        time.sleep(0.05)
+        sem.post(5)
+        for t in ts:
+            t.join(timeout=30)
+            assert not t.is_alive(), f"fast_path={fast} lost a wakeup"
+        assert len(results) == 5
+
+
+def test_private_waiting_array_and_collisions():
+    """A 1-bucket array forces every waiter onto one bucket (max collisions):
+    correctness must hold (collisions are a performance concern only)."""
+    arr = WaitingArray(table_size=1)
+    sem = TWASemaphore(0, waiting="futex", array=arr)
+    done = threading.Semaphore(0)
+    ts = [threading.Thread(target=lambda: (sem.take(), done.release())) for _ in range(6)]
+    for t in ts:
+        t.start()
+    time.sleep(0.05)
+    for _ in range(6):
+        sem.post()
+    for _ in range(6):
+        assert done.acquire(timeout=30)
+    for t in ts:
+        t.join(timeout=10)
+
+
+def test_queue_depth_telemetry():
+    sem = TWASemaphore(2, waiting="futex")
+    assert sem.available() == 2 and sem.queue_depth() == 0
+    sem.take()
+    sem.take()
+    assert sem.available() == 0
+    t = threading.Thread(target=sem.take)
+    t.start()
+    deadline = time.time() + 10
+    while sem.queue_depth() != 1 and time.time() < deadline:
+        time.sleep(0.001)
+    assert sem.queue_depth() == 1  # grant/ticket distance = free telemetry
+    sem.post()
+    t.join(timeout=10)
+    assert not t.is_alive()
+
+
+def test_wraparound_distance():
+    """64-bit modular distance: grant just past 2^64 still compares correctly."""
+    near = (1 << 64) - 2
+    assert _dist(1, near) == 3  # grant wrapped to 1, ticket at 2^64-2
+    assert _dist(near, 1) == -3
+    sem = TWASemaphore(0, waiting="futex")
+    sem.ticket.store(near)
+    sem.grant.store(near)
+    sem.post(3)
+    sem.take()  # ticket 2^64-2 vs grant 1 (wrapped): distance 3 > 0 → pass
+    assert sem.available() == 2

@@ -1,0 +1,159 @@
+"""L2 — functional batched semaphore (core.functional) vs a sequential oracle.
+
+The batched take is defined to linearize requests in row order; these tests
+check it against a literal sequential ticket-semaphore simulation, including
+the TWAHash bucket notification semantics (woken_mask must cover every waiter
+whose admission state could have changed — no lost wakeups, spurious wakes
+allowed), plus hypothesis property tests over random take/post interleavings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.functional import (
+    bucket_index,
+    make_multi_sema,
+    make_sema,
+    poll,
+    post_batch,
+    take_batch,
+    take_batch_multi,
+    post_batch_multi,
+    woken_mask,
+)
+
+
+def test_take_batch_fifo_ranks():
+    s = make_sema(count=3, table_size=64)
+    req = jnp.array([True, True, False, True, True, True])
+    s2, tickets, admitted, buckets = take_batch(s, req)
+    # tickets: row order among requesters; non-requesters get placeholder rank
+    np.testing.assert_array_equal(np.asarray(tickets), [0, 1, 2, 2, 3, 4])
+    # grant=3 ⇒ exactly the first three requesters admitted (FCFS)
+    np.testing.assert_array_equal(np.asarray(admitted), [1, 1, 0, 1, 0, 0])
+    assert int(s2.ticket) == 5 and int(s2.grant) == 3
+
+
+def test_post_then_poll_admits_in_order():
+    s = make_sema(0, table_size=64)
+    s, tickets, admitted, buckets = take_batch(s, jnp.ones(4, bool))
+    assert not bool(admitted.any())
+    s = post_batch(s, 2)
+    adm = poll(s, tickets)
+    np.testing.assert_array_equal(np.asarray(adm), [1, 1, 0, 0])
+    s = post_batch(s, 2)
+    np.testing.assert_array_equal(np.asarray(poll(s, tickets)), [1, 1, 1, 1])
+
+
+def test_woken_mask_no_lost_wakeups():
+    """Every waiter whose ticket was granted must see its bucket move."""
+    s = make_sema(0, table_size=32)
+    s, tickets, admitted, buckets = take_batch(s, jnp.ones(8, bool))
+    observed = s.bucket_seq[buckets]  # waiters sample their bucket (KeyMonitor)
+    s = post_batch(s, 5)
+    woken = woken_mask(s, observed, buckets)
+    granted = np.asarray(poll(s, tickets))
+    # TWA guarantee: granted ⇒ woken (spurious wakes allowed, lost wakes not)
+    assert np.all(~granted | np.asarray(woken))
+
+
+def test_bucket_dispersal_stride17():
+    """Adjacent tickets land 17 buckets apart (paper's ticket-aware hash)."""
+    s = make_sema(0, table_size=1024)
+    idx = np.asarray(bucket_index(s, jnp.arange(64, dtype=jnp.uint32)))
+    d = np.diff(idx) % 1024
+    assert np.all(d == 17)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.booleans(), st.integers(0, 5)),  # (is_post?, n) per event
+        min_size=1,
+        max_size=30,
+    ),
+    st.integers(0, 4),  # initial count
+)
+def test_sequential_oracle_property(events, count):
+    """Random interleaving of batched takes and posts matches a plain
+    counting-semaphore oracle: the k-th requester (global FCFS order) is
+    admitted iff k < grant at evaluation time; totals always conserve."""
+    s = make_sema(count, table_size=64)
+    oracle_tickets = 0
+    oracle_grant = count
+    all_tickets = []
+    for is_post, n in events:
+        if is_post:
+            s = post_batch(s, n)
+            oracle_grant += n
+        else:
+            req = jnp.ones(max(n, 0), bool)
+            if n == 0:
+                continue
+            s, tk, adm, _ = take_batch(s, req)
+            np.testing.assert_array_equal(
+                np.asarray(tk), np.arange(oracle_tickets, oracle_tickets + n)
+            )
+            expect = (np.arange(oracle_tickets, oracle_tickets + n) < oracle_grant)
+            np.testing.assert_array_equal(np.asarray(adm), expect)
+            oracle_tickets += n
+            all_tickets.extend(range(oracle_tickets - n, oracle_tickets))
+        assert int(s.ticket) == oracle_tickets
+        assert int(s.grant) == oracle_grant
+    # final poll = oracle admission for every ticket ever issued
+    if all_tickets:
+        adm = np.asarray(poll(s, jnp.asarray(all_tickets, dtype=jnp.uint32)))
+        np.testing.assert_array_equal(adm, np.asarray(all_tickets) < oracle_grant)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 5),  # n semaphores (experts)
+    st.lists(st.integers(0, 4), min_size=1, max_size=40),  # expert id per token
+    st.integers(1, 6),  # capacity
+)
+def test_multi_sema_oracle(n_sema, ids, capacity):
+    """Per-expert FCFS capacity admission == independent sequential counters."""
+    ids = [i % n_sema for i in ids]
+    st_ = make_multi_sema(jnp.full((n_sema,), capacity, jnp.uint32))
+    st2, tickets, admitted = take_batch_multi(
+        st_, jnp.asarray(ids, jnp.int32), jnp.ones(len(ids), bool)
+    )
+    counts = {e: 0 for e in range(n_sema)}
+    for row, e in enumerate(ids):
+        expect = counts[e] < capacity
+        assert bool(admitted[row]) == expect, (row, e, counts)
+        assert int(tickets[row]) == counts[e]  # ticket == expert buffer slot
+        counts[e] += 1
+    # post frees capacity per-expert
+    st3 = post_batch_multi(st2, jnp.ones((n_sema,), jnp.uint32))
+    st4, t2, adm2 = take_batch_multi(
+        st3, jnp.asarray([0], jnp.int32), jnp.ones(1, bool)
+    )
+    assert bool(adm2[0]) == (counts[0] < capacity + 1)
+
+
+def test_take_post_jit_roundtrip():
+    """The functional semaphore composes under jit/scan (in-graph use)."""
+
+    @jax.jit
+    def run(s):
+        def body(s, _):
+            s, tk, adm, _ = take_batch(s, jnp.ones(3, bool))
+            s = post_batch(s, 2)
+            return s, adm.sum()
+        return jax.lax.scan(body, s, None, length=5)
+
+    s, adms = run(make_sema(2, table_size=64))
+    # 3 takes vs 2 posts per step ⇒ deficit grows by 1; admission at
+    # take-time sees the *pre-post* grant (waiters poll later, FIFO):
+    assert int(s.ticket) == 15 and int(s.grant) == 12
+    np.testing.assert_array_equal(np.asarray(adms), [2, 1, 0, 0, 0])
+    # every issued ticket below the final grant is (by now) admitted — FIFO
+    adm = np.asarray(poll(s, jnp.arange(15, dtype=jnp.uint32)))
+    np.testing.assert_array_equal(adm, np.arange(15) < 12)
