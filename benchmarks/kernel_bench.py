@@ -30,7 +30,7 @@ def flash_vmem(block_q, block_k, hd, G):
     return scratch + tiles + probs
 
 
-def run() -> str:
+def run(metrics: dict | None = None) -> str:
     lines = ["== Pallas kernels (interpret-mode validation + VMEM budgets) =="]
     key = jax.random.PRNGKey(0)
 
@@ -55,6 +55,8 @@ def run() -> str:
             f"flash {name} bq={bq} bk={bk}: err={err:.1e} "
             f"VMEM={vm / 2**20:.1f}MiB ({'OK' if vm < VMEM_BUDGET else 'OVER'}) "
             f"AI={flops / bytes_hbm:.0f} flop/B")
+        if metrics is not None:
+            metrics.setdefault("oracle_err", {})[f"flash/{name.strip()}"] = err
 
     # decode attention
     for name, C, H, KV, hd, bk in [
@@ -76,6 +78,8 @@ def run() -> str:
         lines.append(
             f"decode {name} bk={bk}: err={err:.1e} VMEM={vm / 2**20:.2f}MiB "
             f"AI={ai:.1f} flop/B (memory-bound by design)")
+        if metrics is not None:
+            metrics.setdefault("oracle_err", {})[f"decode/{name.strip()}"] = err
 
     # sema_batch
     req = jax.random.bernoulli(key, 0.6, (2048,))
@@ -86,6 +90,8 @@ def run() -> str:
     exact = bool(np.array_equal(np.asarray(out[4]), np.asarray(ref["admitted"])))
     lines.append(f"sema_batch 2048 reqs × 1024 buckets: exact={exact} "
                  f"(tri-matmul rank + permutation one-hot poke)")
+    if metrics is not None:
+        metrics["sema_batch_exact"] = exact
     return "\n".join(lines)
 
 

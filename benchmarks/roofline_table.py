@@ -74,9 +74,12 @@ def collective_summary() -> str:
     return "\n".join(lines)
 
 
-def run() -> str:
+def run(metrics: dict | None = None) -> str:
     prod = load("production")
     ana = load("analysis")
+    if metrics is not None:
+        metrics["production_cells"] = len(prod)
+        metrics["analysis_cells"] = len(ana)
     return (
         f"== Dry-run: {len(prod)} production cells "
         f"({len([1 for k in prod if k[2] == 'multipod'])} multipod), "

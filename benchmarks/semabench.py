@@ -22,7 +22,7 @@ from repro.core.simulator import sweep
 THREADS = (1, 2, 4, 8, 16, 32, 64)
 
 
-def fig1_model_table() -> str:
+def fig1_model_table(metrics: dict | None = None) -> str:
     res = sweep(thread_counts=THREADS)
     lines = ["", "Figure-1 (coherence-model) — ops/sec, CS=PRNG-step, count=1",
              f"{'T':>4} {'ticket':>12} {'twa':>12} {'pthread':>12} {'twa/ticket':>11}"]
@@ -31,6 +31,9 @@ def fig1_model_table() -> str:
         tw = res["twa"][i].throughput_per_sec
         pt = res["pthread"][i].throughput_per_sec
         lines.append(f"{t:>4} {tk:>12.0f} {tw:>12.0f} {pt:>12.0f} {tw / tk:>11.2f}")
+        if metrics is not None:
+            metrics.setdefault("model_throughput", {})[str(t)] = {
+                "ticket": tk, "twa": tw, "pthread": pt}
     return "\n".join(lines)
 
 
@@ -70,8 +73,8 @@ def real_thread_table(iters: int = 300) -> str:
     return "\n".join(lines)
 
 
-def run() -> str:
-    return fig1_model_table() + "\n" + real_thread_table()
+def run(metrics: dict | None = None) -> str:
+    return fig1_model_table(metrics) + "\n" + real_thread_table()
 
 
 if __name__ == "__main__":

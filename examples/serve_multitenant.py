@@ -1,0 +1,73 @@
+"""Multi-tenant QoS serving example: three tenants with 4:2:1 weights share
+one continuous-batching engine, demonstrating
+
+  * weighted-FCFS admission — under saturation, admission shares track the
+    configured weights (stride-scheduled grant replenishment over per-tenant
+    functional TWA semaphores);
+  * the tombstone protocol — a batch of requests carrying an admission
+    deadline that passes while queued is expired (tickets tombstoned) and
+    never blocks later live requests;
+  * the waiting-array effect at tenant granularity — the scheduler
+    re-examines only tenant queues whose buckets were poked (skip ratio
+    printed).
+
+Run:  PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+WEIGHTS = {"gold": 4.0, "silver": 2.0, "bronze": 1.0}
+
+
+def main():
+    eng = ContinuousBatchingEngine(
+        lambda active: np.zeros(len(active)), lambda r: None, n_slots=6,
+        tenants=WEIGHTS)
+    reqs, rid = [], 0
+    for _ in range(120):
+        for t in WEIGHTS:
+            reqs.append(Request(rid=rid, prompt=[1], max_new_tokens=3,
+                                tenant_id=t))
+            rid += 1
+    # one bronze burst with a deadline that will expire in the queue
+    doomed = [Request(rid=rid + i, prompt=[1], max_new_tokens=3,
+                      tenant_id="bronze", deadline=time.monotonic() + 0.02)
+              for i in range(8)]
+    eng.submit_batch(reqs + doomed)
+    time.sleep(0.05)  # the doomed deadlines pass while queued
+
+    sat_admitted = None
+    steps = 0
+    total = len(reqs) + len(doomed)
+    while eng.stats.finished + eng.stats.expired < total and steps < 50 * total:
+        if sat_admitted is None and not all(d > 0 for d in eng._tenant_live):
+            sat_admitted = dict(eng.tenant_admitted)  # saturation window ends
+        eng.step(lambda lg: np.zeros(len(lg), np.int64))
+        steps += 1
+
+    tel = eng.telemetry()
+    wsum = sum(WEIGHTS.values())
+    stot = sum(sat_admitted.values())
+    print(f"served {eng.stats.finished} requests in {steps} engine steps; "
+          f"{eng.stats.expired} deadline-expired (tombstoned)")
+    print(f"{'tenant':>8} {'weight':>7} {'sat-share':>10} {'target':>7} "
+          f"{'expired':>8}")
+    for t, w in WEIGHTS.items():
+        share = sat_admitted[t] / stot
+        print(f"{t:>8} {w:>7.1f} {share:>10.3f} {w / wsum:>7.3f} "
+              f"{tel['tenants'][t]['expired']:>8}")
+        assert abs(share - w / wsum) / (w / wsum) < 0.15
+    s = eng.stats
+    print(f"scheduler examined {s.backlog_scans} rows, skipped "
+          f"{s.backlog_skipped} (TWA bucket gating at tenant granularity)")
+    assert eng.stats.expired == 8 and eng.stats.finished == len(reqs)
+    return eng
+
+
+if __name__ == "__main__":
+    main()
+    print("[example] weighted-FCFS admission + tombstoned deadlines OK")

@@ -1,0 +1,248 @@
+"""Batched multi-tenant QoS admission — the in-graph counterpart.
+
+Extends `core.functional`'s MultiSemaState with per-tenant **weights**,
+**deadline masks**, and a **tombstone-transparent admission rule**, so a
+whole multi-tenant admission round (expire → admit → replenish → poke)
+is one vectorized pass under jit — the reference semantics for a future
+Pallas variant in `kernels/` (same role `core.functional` plays for
+`kernels/sema_batch`).
+
+State (all per-tenant vectors of length S, plus one shared waiting array):
+
+  ticket / grant — the paper's counters, per tenant.  ``grant`` advances
+      only via weighted replenishment from the global slot pool.
+  consumed       — grant units actually used by admitted live rows;
+      ``avail = grant − consumed`` is a tenant's spendable credit.
+  dead           — cumulative tombstoned (deadline-expired / cancelled)
+      tickets; used to widen the conservative bucket-poke window, exactly
+      generalizing `post_batch`'s ``[grant, grant+n)`` window (reduces to
+      it when dead == 0).
+  weight / vpass — stride scheduler: granting a unit advances the
+      tenant's virtual pass by 1/weight; free units flow to the
+      minimum-pass tenant with unmet live demand, so admission shares
+      converge to the weights under saturation.
+  bucket_seq     — ONE waiting array shared by all S tenant semaphores
+      (paper §1: the array is process-global); tenants are dispersed by
+      salting the TWA hash per tenant.
+
+The admission rule is the batched tombstone-skip: a live row is admitted
+iff its FCFS rank *among live rows of its tenant* is below the tenant's
+avail — dead tickets anywhere in the queue (head, middle, or deep) are
+transparent, so grant units always reach the earliest live waiters and
+FCFS among live tickets is preserved (`core.functional.live_fifo_rank`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.functional import _sdist, live_fifo_rank, twa_hash_u32
+from ..core.hashfn import MIX32KA
+
+DEFAULT_TABLE_SIZE = 1024
+
+
+class QoSState(NamedTuple):
+    ticket: jax.Array  # (S,) u32 — per-tenant tickets issued
+    grant: jax.Array  # (S,) u32 — per-tenant units replenished
+    consumed: jax.Array  # (S,) u32 — units spent on admitted live rows
+    dead: jax.Array  # (S,) u32 — tombstoned tickets (poke-window slack)
+    weight: jax.Array  # (S,) f32 — QoS weights
+    vpass: jax.Array  # (S,) f32 — stride virtual pass
+    bucket_seq: jax.Array  # (T,) u32 — shared waiting array
+    salt: jax.Array  # u32
+
+
+def make_qos(weights, table_size: int = DEFAULT_TABLE_SIZE,
+             salt: int = 0x9E3779B9) -> QoSState:
+    w = jnp.asarray(weights, jnp.float32)
+    assert table_size > 0 and (table_size & (table_size - 1)) == 0
+    z = jnp.zeros_like(w, dtype=jnp.uint32)
+    return QoSState(ticket=z, grant=z, consumed=z, dead=z, weight=w,
+                    vpass=jnp.zeros_like(w),
+                    bucket_seq=jnp.zeros((table_size,), jnp.uint32),
+                    salt=jnp.uint32(salt))
+
+
+def tenant_salt(state: QoSState, tenant_ids) -> jax.Array:
+    """Per-tenant TWAHash salt — disperses the S logical semaphores over
+    the one shared array (the `uintptr_t(L)` component, per tenant)."""
+    t = jnp.asarray(tenant_ids, jnp.uint32)
+    return state.salt + (t + jnp.uint32(1)) * jnp.uint32(MIX32KA)
+
+
+def qos_bucket_index(state: QoSState, tenant_ids, tickets) -> jax.Array:
+    table = state.bucket_seq.shape[-1]
+    h = twa_hash_u32(tenant_salt(state, tenant_ids),
+                     jnp.asarray(tickets, jnp.uint32))
+    return (h & jnp.uint32(table - 1)).astype(jnp.int32)
+
+
+def avail(state: QoSState) -> jax.Array:
+    """Spendable grant units per tenant (int32, ≥ 0 by invariant)."""
+    return _sdist(state.grant, state.consumed)
+
+
+# -- take ---------------------------------------------------------------------
+
+
+def qos_take(state: QoSState, tenant_ids: jax.Array, mask: jax.Array,
+             deadlines: jax.Array | None = None, now=0.0):
+    """Batched ticket issuance for N arrivals against S tenants.
+
+    Rows whose deadline already passed at arrival are *dead on arrival*:
+    they receive no ticket and are reported in ``expired``.  Returns
+    ``(state', tickets, buckets, expired)``; admission is decided by
+    :func:`qos_admit` (rank among live waiters), not at take time.
+
+    Precision note: deadlines/now compare in float32 under default jax —
+    pass RELATIVE times (deltas from a caller-held epoch), not absolute
+    wall/monotonic stamps, which lose sub-second resolution at ~1e6 s.
+    """
+    tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
+    if deadlines is None:
+        expired = jnp.zeros(mask.shape, bool)
+    else:
+        expired = mask & (jnp.asarray(deadlines) <= now)
+    eff = mask & ~expired
+    S = state.ticket.shape[0]
+    onehot = jax.nn.one_hot(tenant_ids, S, dtype=jnp.uint32) * \
+        eff[:, None].astype(jnp.uint32)
+    ranks = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive, per tenant
+    my_rank = jnp.take_along_axis(ranks, tenant_ids[:, None], axis=1)[:, 0]
+    tickets = state.ticket[tenant_ids] + my_rank
+    new_ticket = state.ticket + jnp.sum(onehot, axis=0)
+    buckets = qos_bucket_index(state, tenant_ids, tickets)
+    return state._replace(ticket=new_ticket), tickets, buckets, expired
+
+
+# -- expire (tombstone) --------------------------------------------------------
+
+
+def qos_expire(state: QoSState, tenant_ids: jax.Array, alive: jax.Array,
+               deadlines: jax.Array, now):
+    """Tombstone waiting rows whose deadline passed: they leave the live
+    set (skip-transparent to later admissions) and widen the poke window.
+    Returns ``(state', alive', newly_expired)``."""
+    tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
+    newly = alive & (jnp.asarray(deadlines) <= now)
+    S = state.ticket.shape[0]
+    per_tenant = jnp.sum(
+        jax.nn.one_hot(tenant_ids, S, dtype=jnp.uint32)
+        * newly[:, None].astype(jnp.uint32), axis=0)
+    return state._replace(dead=state.dead + per_tenant), alive & ~newly, newly
+
+
+# -- admit --------------------------------------------------------------------
+
+
+def qos_admit(state: QoSState, tenant_ids: jax.Array, tickets: jax.Array,
+              alive: jax.Array):
+    """Tombstone-transparent weighted-FCFS admission over the live backlog:
+    row admitted ⇔ live_fifo_rank < avail[tenant].  Consumes the units.
+    Returns ``(state', admitted)``."""
+    tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
+    S = state.ticket.shape[0]
+    rank = live_fifo_rank(tenant_ids, jnp.asarray(tickets, jnp.uint32), alive)
+    admitted = alive & (rank < avail(state)[tenant_ids])
+    spent = jnp.sum(jax.nn.one_hot(tenant_ids, S, dtype=jnp.uint32)
+                    * admitted[:, None].astype(jnp.uint32), axis=0)
+    return state._replace(consumed=state.consumed + spent), admitted
+
+
+# -- replenish (weighted grant from the global pool) ---------------------------
+
+
+def qos_replenish(state: QoSState, free_units, live_depth: jax.Array,
+                  max_units: int):
+    """Distribute up to ``free_units`` global slots by stride scheduling to
+    tenants with unmet live demand; bump the TWAHash buckets of the
+    conservatively-enabled ticket window (alloc + dead slack per tenant).
+
+    ``max_units`` bounds the jit-static loop (engine: total slot count).
+    Returns ``(state', alloc, leftover)`` — ``leftover`` units stay in the
+    caller's pool (work conservation).
+    """
+    free_units = jnp.asarray(free_units, jnp.int32)
+    live_depth = jnp.asarray(live_depth, jnp.int32)
+    inf = jnp.float32(jnp.inf)
+
+    def body(i, carry):
+        vpass, alloc = carry
+        unmet = live_depth - (avail(state) + alloc.astype(jnp.int32))
+        active = (unmet > 0) & (i < free_units)
+        eff = jnp.where(active, vpass, inf)
+        j = jnp.argmin(eff)
+        can = active[j]
+        vpass = vpass.at[j].add(
+            jnp.where(can, 1.0 / state.weight[j], 0.0))
+        alloc = alloc.at[j].add(jnp.where(can, 1, 0).astype(jnp.uint32))
+        return vpass, alloc
+
+    vpass, alloc = jax.lax.fori_loop(
+        0, max_units, body,
+        (state.vpass, jnp.zeros_like(state.grant)))
+    leftover = free_units - jnp.sum(alloc).astype(jnp.int32)
+
+    # Conservative successor poke: newly enabled live tickets of tenant s
+    # lie in [grant_s, grant_s + alloc_s + dead_s) — every dead ticket can
+    # shift the live frontier up by one.  Spurious pokes are benign
+    # (paper: collisions cause extra re-checks only).  The window is
+    # clamped to the issued-ticket frontier: no waiter holds a ticket
+    # ≥ `ticket`, so the cumulative dead slack stops inflating the poke
+    # cost once it passes the outstanding queue (and decays as it drains).
+    # No-lost-wakeup invariant even when the window exceeds the table:
+    # `offs` spans one full table and TICKET_STRIDE (17) is coprime with
+    # the power-of-two table size, so `table` consecutive tickets cover
+    # every bucket exactly once — a ≥table window degrades to a full-table
+    # poke (wakes everyone), never to a missed poke.
+    table = state.bucket_seq.shape[-1]
+    S = state.ticket.shape[0]
+    offs = jnp.arange(table, dtype=jnp.uint32)[None, :]  # (1, T)
+    outstanding = jnp.maximum(_sdist(state.ticket, state.grant), 0)
+    width = jnp.minimum((alloc + state.dead).astype(jnp.int32),
+                        outstanding).astype(jnp.uint32)[:, None]  # (S, 1)
+    enabled = offs < width
+    idx = qos_bucket_index(
+        state, jnp.broadcast_to(jnp.arange(S)[:, None], (S, table)),
+        state.grant[:, None] + offs)
+    bump = jnp.zeros((table,), jnp.uint32).at[idx.reshape(-1)].add(
+        enabled.reshape(-1).astype(jnp.uint32))
+    return state._replace(grant=state.grant + alloc, vpass=vpass,
+                          bucket_seq=state.bucket_seq + bump), alloc, leftover
+
+
+def qos_reclaim(state: QoSState, live_depth: jax.Array):
+    """Burn surplus credit (granted past all live demand — stranded by
+    tombstones) back to the caller's pool.  Returns ``(state', units)``."""
+    live_depth = jnp.asarray(live_depth, jnp.int32)
+    surplus = jnp.maximum(avail(state) - live_depth, 0).astype(jnp.uint32)
+    return (state._replace(consumed=state.consumed + surplus),
+            jnp.sum(surplus).astype(jnp.int32))
+
+
+# -- one fused admission round -------------------------------------------------
+
+
+def qos_round(state: QoSState, tenant_ids: jax.Array, tickets: jax.Array,
+              alive: jax.Array, deadlines: jax.Array, now, free_units,
+              max_units: int):
+    """One whole multi-tenant admission round as a single jit-able pass:
+    expire → replenish (weighted) → admit (tombstone-transparent FCFS) →
+    reclaim stranded credit.  Returns
+    ``(state', admitted, expired, leftover_units)``."""
+    tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
+    state, alive, expired = qos_expire(state, tenant_ids, alive, deadlines, now)
+    S = state.ticket.shape[0]
+    depth = jnp.sum(jax.nn.one_hot(tenant_ids, S, dtype=jnp.int32)
+                    * alive[:, None].astype(jnp.int32), axis=0)
+    state, _, leftover = qos_replenish(state, free_units, depth, max_units)
+    state, admitted = qos_admit(state, tenant_ids, tickets, alive)
+    depth_after = depth - jnp.sum(
+        jax.nn.one_hot(tenant_ids, S, dtype=jnp.int32)
+        * admitted[:, None].astype(jnp.int32), axis=0)
+    state, reclaimed = qos_reclaim(state, depth_after)
+    return state, admitted, expired, leftover + reclaimed

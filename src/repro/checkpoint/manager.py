@@ -136,12 +136,20 @@ class CheckpointManager:
         final = self.dir / f"step_{step:09d}"
         deadline = time.time() + timeout
         while time.time() < deadline:
+            if final.exists():
+                return True  # a concurrent saver of the same step published it
             commits = list(tmp.glob("commit_*"))
             if len(commits) >= self.expected_hosts:
                 meta = {"step": step, "hosts": self.expected_hosts,
                         "time": time.time()}
-                (tmp / "meta.json").write_text(json.dumps(meta))
-                os.replace(tmp, final)  # atomic publish
+                try:
+                    (tmp / "meta.json").write_text(json.dumps(meta))
+                    os.replace(tmp, final)  # atomic publish
+                except FileNotFoundError:
+                    # lost the publish race to a concurrent finalizer of the
+                    # same step — the checkpoint exists either way
+                    if not final.exists():
+                        raise
                 self._gc()
                 return True
             time.sleep(0.01)

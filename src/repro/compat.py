@@ -1,0 +1,70 @@
+"""jax version compatibility — the repo targets the current public mesh /
+shard_map API (jax ≥ 0.5-style `jax.sharding.get_abstract_mesh`,
+`jax.set_mesh`, `jax.shard_map(..., axis_names=..., check_vma=...)`) while
+still running on jax 0.4.x (this container ships 0.4.37).  Everything here
+resolves to the native API when it exists and otherwise adapts:
+
+  get_abstract_mesh() — public accessor, else the 0.4.x thread-resources
+      physical mesh (`with mesh:` / set_mesh context); returns None when no
+      mesh context is active.
+  set_mesh(mesh)      — `jax.set_mesh` when present; on 0.4.x the Mesh
+      object itself is the context manager.
+  shard_map(...)      — `jax.shard_map` when present; on 0.4.x wraps
+      `jax.experimental.shard_map.shard_map`, translating
+      `axis_names={manual}` → `auto=frozenset(mesh.axis_names) - manual`
+      and `check_vma` → `check_rep`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        return None if (m is None or not m.axis_names) else m
+    from jax._src import mesh as _mesh
+
+    m = _mesh.get_abstract_mesh()
+    if isinstance(m, tuple):  # 0.4.x: bare context tuple, not a Mesh
+        m = _mesh.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    return None if (m is None or not m.axis_names) else m
+
+
+def set_mesh(mesh):
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # 0.4.x: Mesh is itself the context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return native(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+    if axis_names is not None:  # manual axes → complement is auto
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _sm(f, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on current jax, a
+    one-element list of dicts on 0.4.x."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

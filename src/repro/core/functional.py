@@ -161,3 +161,21 @@ def take_batch_multi(state: MultiSemaState, sema_ids: jax.Array, mask: jax.Array
 
 def post_batch_multi(state: MultiSemaState, counts: jax.Array) -> MultiSemaState:
     return state._replace(grant=state.grant + jnp.asarray(counts, jnp.uint32))
+
+
+def live_fifo_rank(sema_ids: jax.Array, tickets: jax.Array,
+                   alive: jax.Array) -> jax.Array:
+    """Rank of each row among the *alive* rows of its semaphore, in ticket
+    order — the batched form of the tombstone-skip: dead (cancelled /
+    deadline-expired) tickets are transparent, so grant units flow to the
+    earliest live waiters and FCFS among live tickets is preserved exactly.
+
+    O(N²·S/…) via a pairwise comparison — reference semantics; the Pallas
+    variant would use the blocked-prefix structure of `take_batch_multi`.
+    Dead rows get rank N (never admitted by a `< avail` test).
+    """
+    n = tickets.shape[0]
+    same = sema_ids[:, None] == sema_ids[None, :]
+    before = _sdist(tickets[:, None], tickets[None, :]) > 0  # ticket_j < ticket_i
+    rank = jnp.sum(same & before & alive[None, :], axis=1).astype(jnp.int32)
+    return jnp.where(alive, rank, jnp.int32(n))

@@ -12,8 +12,10 @@ code:
       parallelism benefits);
   C3  under contention, Ticket-Semaphore throughput decays ~1/T while
       TWA-Semaphore stays ~flat (global spinning vs ≤threshold spinners);
-  C4  pthread-like (non-FIFO parking) pays wakeup latency but benefits from
-      barging; it is never FIFO.
+  C4  pthread-like pays wakeup latency but benefits from barging; its
+      *admission order* is never FIFO (even though the kernel sleep queue
+      itself wakes FIFO — the unfairness comes from bargers, not the
+      wake discipline).
 
 Model (times in ns; defaults roughly an Oracle X5-2-class 2-socket Xeon):
   * each thread loops: take → CS(c) → post → NCS(n)   (semabench, count=1)
@@ -66,6 +68,11 @@ class SimResult:
     throughput_per_sec: float
     futile_wakeups: int = 0
     max_queue: int = 0
+    # pthread only: park/wake orders of the kernel sleep queue.  The queue
+    # discipline is FIFO (futex wait-queues wake oldest-first); the *admission*
+    # unfairness of the pthread baseline comes from barging, not wake order.
+    park_order: list = field(default_factory=list)
+    wake_order: list = field(default_factory=list)
 
 
 @dataclass(order=True)
@@ -91,7 +98,13 @@ def simulate(policy: str, threads: int, p: SimParams | None = None) -> SimResult
     # Semaphore state: count=1 (used as a lock, per the paper's benchmark).
     available = 1
     fifo: list[int] = []  # waiting tickets in order (ticket/twa)
-    parked: list[int] = []  # parked threads (pthread, LIFO ~ wake order noise)
+    # Parked threads (pthread): FIFO wake order — futex wait-queues hand out
+    # wakeups oldest-first.  The baseline's unfairness is NOT here: it comes
+    # from barging (a running thread grabs the permit before the wakee
+    # arrives), which tests assert via max_queue / futile_wakeups.
+    parked: list[int] = []
+    park_order: list[int] = []
+    wake_order: list[int] = []
     iterations = 0
     futile = 0
     max_queue = 0
@@ -147,6 +160,7 @@ def simulate(policy: str, threads: int, p: SimParams | None = None) -> SimResult
                     if ev.kind == "wakeup":
                         futile += 1  # a barger beat the wakee to the permit
                     parked.append(ev.tid)
+                    park_order.append(ev.tid)
                     max_queue = max(max_queue, len(parked))
             elif available > 0 and not fifo:
                 available -= 1
@@ -162,9 +176,12 @@ def simulate(policy: str, threads: int, p: SimParams | None = None) -> SimResult
                 available += 1
                 extra = 0.0
                 if parked:
-                    # futex_wake syscall on the poster's path; the wakee
-                    # arrives wake_ns later (and usually loses to a barger).
-                    push(now + p.wake_ns, "wakeup", parked.pop(0))
+                    # futex_wake syscall on the poster's path; FIFO pop —
+                    # the oldest sleeper is woken.  The wakee arrives
+                    # wake_ns later (and usually loses to a barger).
+                    wakee = parked.pop(0)
+                    wake_order.append(wakee)
+                    push(now + p.wake_ns, "wakeup", wakee)
                     extra = p.futex_wake_syscall_ns
                 push(now + extra + p.ncs_ns, "take", ev.tid)
                 continue
@@ -183,6 +200,8 @@ def simulate(policy: str, threads: int, p: SimParams | None = None) -> SimResult
         throughput_per_sec=iterations / (min(now, p.duration_ns) * 1e-9) if now > 0 else 0.0,
         futile_wakeups=futile,
         max_queue=max_queue,
+        park_order=park_order,
+        wake_order=wake_order,
     )
 
 

@@ -68,6 +68,16 @@ class KVStore:
                 self._cond.wait(left)
             return self._data.get(key, 0)
 
+    def txn(self, fn):
+        """Atomic read-modify-write over the store — the etcd ``Txn``
+        analogue.  The tombstone protocol needs it: cancel's (grant check,
+        mark-dead) and release's (advance, dead-check) must not interleave,
+        or a slot could be granted to a dead ticket AND reported cancelled."""
+        with self._cond:
+            out = fn(self._data)
+            self._cond.notify_all()
+            return out
+
 
 class DistributedTicketLease:
     """Ticket/grant resource on the KV store with TWA bucket waiting.
@@ -76,6 +86,15 @@ class DistributedTicketLease:
     hashed bucket key (kv:`bucket/<i>`), which the releaser pokes.
     release(): advance grant, poke the successor's bucket (benaphore skip
     when the distance shows no waiters).
+
+    Cancellable waits (the tombstone protocol, distributed): a waiter that
+    gives up marks its ticket dead (`<name>/dead/<ticket>`); release()
+    skips dead tickets when advancing grant, so a dying host that leaked a
+    ticket can never wedge the cluster grant sequence — the slot flows to
+    the next *live* ticket and FCFS among live hosts is preserved.  On
+    timeout, acquire() tombstones its own ticket; if the tombstone loses
+    the race (grant arrived first) the lease is held and returned instead
+    of raising.
     """
 
     BUCKETS = 64
@@ -86,11 +105,26 @@ class DistributedTicketLease:
         self.name = name
         self.threshold = long_term_threshold
         self._salt = index_for(hash(name), 1 << 31)
+        self.dead_skipped = 0  # grant advances that bypassed a tombstone
         if kv.incr(f"{name}/init", 0) == 0 and kv.incr(f"{name}/init") == 0:
             kv.incr(f"{name}/grant", capacity)
 
     def _bucket_key(self, ticket: int) -> str:
         return f"{self.name}/bucket/{index_for(twa_hash(self._salt, ticket), self.BUCKETS)}"
+
+    def cancel(self, ticket: int) -> bool:
+        """Tombstone ``ticket``.  True: dead, will be skipped by release().
+        False: grant already covers it — the caller holds the lease and
+        must release() it.  Runs as one KV transaction (etcd Txn)."""
+        gk, dk = f"{self.name}/grant", f"{self.name}/dead/{ticket}"
+
+        def do(d):
+            if d.get(gk, 0) - ticket > 0:
+                return False
+            d[dk] = 1
+            return True
+
+        return self.kv.txn(do)
 
     def acquire(self, timeout: float = 30.0) -> int:
         ticket = self.kv.incr(f"{self.name}/ticket")
@@ -102,7 +136,11 @@ class DistributedTicketLease:
             if grant - ticket > 0:
                 return ticket
             if time.time() > deadline:
-                raise TimeoutError(f"lease {self.name}: ticket {ticket} vs grant {grant}")
+                if self.cancel(ticket):
+                    raise TimeoutError(
+                        f"lease {self.name}: ticket {ticket} vs grant {grant} "
+                        "(ticket tombstoned — grant sequence not wedged)")
+                return ticket  # lost race: the lease arrived at expiry
             if grant + self.threshold - ticket > 0:
                 # near the head: short-term wait directly on grant
                 self.kv.wait_change(f"{self.name}/grant", grant, timeout=0.05)
@@ -111,12 +149,29 @@ class DistributedTicketLease:
                 observed = self.kv.wait_change(bucket, observed, timeout=0.25)
 
     def release(self) -> None:
-        grant = self.kv.incr(f"{self.name}/grant") + 1
-        g = grant + self.threshold
+        gk = f"{self.name}/grant"
+
+        def advance(d):
+            """Skip-aware grant: keep advancing while the enabled ticket is
+            tombstoned (one unit may hop several dead tickets)."""
+            skipped = 0
+            while True:
+                enabled = d.get(gk, 0)
+                d[gk] = enabled + 1
+                if d.pop(f"{self.name}/dead/{enabled}", None) is None:
+                    return enabled + 1, skipped
+                skipped += 1
+
+        grant, skipped = self.kv.txn(advance)
+        self.dead_skipped += skipped
         ticket = self.kv.get(f"{self.name}/ticket")
-        if g - ticket >= 0:
-            return  # benaphore fast path: nobody long-term waiting
-        self.kv.incr(self._bucket_key(g))  # poke successor's successor
+        # Poke every bucket staged by this advance (the skip may have moved
+        # grant several steps; each step has its own successor's successor).
+        for v in range(grant - skipped, grant + 1):
+            g = v + self.threshold
+            if g - ticket >= 0:
+                break  # benaphore fast path: nobody long-term waiting past g
+            self.kv.incr(self._bucket_key(g))
 
     def queue_depth(self) -> int:
         return max(0, self.kv.get(f"{self.name}/ticket") - self.kv.get(f"{self.name}/grant"))

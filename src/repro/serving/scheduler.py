@@ -20,6 +20,15 @@ cache).  Admission is a ticket semaphore with `grant` preloaded to S:
     block politely (client-facing synchronous API), while the batched
     in-graph admission uses core.functional / kernels.sema_batch.
 
+Multi-tenant QoS mode (``tenants={tenant_id: weight}``): admission routes
+through `admission.functional_qos` — per-tenant functional TWA semaphores
+replenished from the global slot pool by stride scheduling, one shared
+bucket array gating which tenant queues the loop re-examines, and
+deadline-expired backlog entries tombstoned so they never block later
+live tickets (the skip-aware grant of the tombstone protocol).  FCFS holds
+within a tenant; across tenants admission shares converge to the weights
+under saturation.
+
 The engine below is deliberately model-agnostic: `step_fn` is any callable
 (tokens, positions, caches) → (logits, caches); tests drive it with a tiny
 transformer, examples/serve_continuous_batching.py with a reduced config.
@@ -27,8 +36,10 @@ transformer, examples/serve_continuous_batching.py with a reduced config.
 
 from __future__ import annotations
 
+import heapq
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -36,6 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..admission.functional_qos import (
+    make_qos,
+    qos_reclaim,
+    qos_replenish,
+    qos_take,
+)
 from ..core.functional import SemaState, make_sema, post_batch, take_batch, woken_mask
 from ..core.twa_semaphore import TWASemaphore
 
@@ -45,11 +62,14 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int
+    tenant_id: str = "default"
+    deadline: Optional[float] = None  # absolute time.monotonic admission deadline
     ticket: Optional[int] = None
     bucket: Optional[int] = None
     observed_seq: Optional[int] = None
     fast: bool = False  # admitted at take time (paper's fast-path return)
     slot: Optional[int] = None
+    expired: bool = False  # deadline passed before admission (tombstoned)
     out_tokens: list[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     enqueue_t: float = 0.0
@@ -61,6 +81,7 @@ class Request:
 class EngineStats:
     admitted: int = 0
     finished: int = 0
+    expired: int = 0  # deadline-missed before admission (tombstoned tickets)
     steps: int = 0
     backlog_scans: int = 0  # requests re-examined by the scheduler loop
     backlog_skipped: int = 0  # requests NOT re-examined thanks to TWA buckets
@@ -78,6 +99,7 @@ class ContinuousBatchingEngine:
         *,
         table_size: int = 256,
         use_kernel: bool = False,
+        tenants: Optional[dict[str, float]] = None,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -90,11 +112,28 @@ class ContinuousBatchingEngine:
         self._lock = threading.Lock()
         self._client_sem = TWASemaphore(0, waiting="futex")  # completion wakeups
         self._use_kernel = use_kernel
+        # --- multi-tenant QoS admission (admission.functional_qos) ---
+        self._tenants = tenants
+        if tenants is not None:
+            self._tenant_names = list(tenants)
+            self._tindex = {t: i for i, t in enumerate(self._tenant_names)}
+            self.qos = make_qos([tenants[t] for t in self._tenant_names],
+                                table_size=table_size)
+            self._qos_free = n_slots  # undistributed global slots
+            self._tenant_queues: list[deque[Request]] = [
+                deque() for _ in self._tenant_names]
+            self._tenant_live = np.zeros(len(self._tenant_names), np.int64)
+            self.tenant_admitted = {t: 0 for t in self._tenant_names}
+            self.tenant_expired = {t: 0 for t in self._tenant_names}
+            self._deadline_heap: list[tuple[float, int, Request]] = []
 
     # ------------------------------------------------------------ client ----
 
     def submit(self, req: Request) -> Request:
         """Take a ticket (FCFS position) and enqueue."""
+        if self._tenants is not None:
+            self._submit_qos([req])
+            return req
         req.enqueue_t = time.time()
         with self._lock:
             state, tickets, admitted, buckets = take_batch(
@@ -111,6 +150,9 @@ class ContinuousBatchingEngine:
     def submit_batch(self, reqs: list[Request]) -> None:
         """Vectorized ticket issuance — one fused pass for K arrivals (the
         sema_batch kernel path when enabled)."""
+        if self._tenants is not None:
+            self._submit_qos(reqs)
+            return
         with self._lock:
             n = len(reqs)
             if self._use_kernel:
@@ -131,11 +173,147 @@ class ContinuousBatchingEngine:
                 r.observed_seq = int(self.sema.bucket_seq[r.bucket])
                 self.backlog.append(r)
 
+    # ------------------------------------------------- multi-tenant (QoS) ---
+
+    def _submit_qos(self, reqs: list[Request]) -> None:
+        """Batched ticket issuance against the per-tenant QoS semaphores.
+        Arrivals whose deadline already passed are dead on arrival."""
+        unknown = {r.tenant_id for r in reqs} - self._tindex.keys()
+        if unknown:
+            raise ValueError(
+                f"unregistered tenant(s) {sorted(unknown)}; this engine "
+                f"serves tenants {list(self._tenant_names)}")
+        with self._lock:
+            now = time.monotonic()
+            ids = [self._tindex[r.tenant_id] for r in reqs]
+            # Deadlines enter the graph RELATIVE to now: small deltas stay
+            # exact in float32, whereas absolute monotonic stamps (~boot
+            # seconds) lose sub-second precision after weeks of uptime and
+            # would misclassify short-deadline arrivals as dead-on-arrival.
+            dls = [np.inf if r.deadline is None else r.deadline - now
+                   for r in reqs]
+            self.qos, tickets, buckets, expired = qos_take(
+                self.qos, jnp.asarray(ids, jnp.int32),
+                jnp.ones(len(reqs), bool), jnp.asarray(dls), 0.0)
+            seq = np.asarray(self.qos.bucket_seq)
+            for r, i, t, b, e in zip(reqs, ids, np.asarray(tickets),
+                                     np.asarray(buckets), np.asarray(expired)):
+                r.enqueue_t = time.time()
+                if e:
+                    self._expire_req(r, i)
+                    continue
+                r.ticket = int(t)
+                r.bucket = int(b)
+                r.observed_seq = int(seq[r.bucket])
+                r.fast = True  # fresh arrival: examine once on next pass
+                self._tenant_queues[i].append(r)
+                self._tenant_live[i] += 1
+                if r.deadline is not None:
+                    heapq.heappush(self._deadline_heap, (r.deadline, r.rid, r))
+            # Undistributed slots flow to the new demand immediately (the
+            # work-conserving fast path of the hierarchy).
+            self._replenish_qos(0)
+
+    def _expire_req(self, r: Request, tidx: int) -> None:
+        r.expired = True
+        self.stats.expired += 1
+        self.tenant_expired[self._tenant_names[tidx]] += 1
+        r.finish_t = time.time()
+        r.done_event.set()
+
+    def _expire_due_qos(self) -> None:
+        """Tombstone backlog entries whose admission deadline passed.  The
+        host-side skip: the next live same-tenant waiter is flagged for
+        re-examination so the dead ticket never blocks it."""
+        now = time.monotonic()
+        dead_bump = np.zeros(len(self._tenant_names), np.uint32)
+        while self._deadline_heap and self._deadline_heap[0][0] <= now:
+            _, _, r = heapq.heappop(self._deadline_heap)
+            if r.expired or r.slot is not None or r.done_event.is_set():
+                continue  # admitted or already resolved — deadline is moot
+            tidx = self._tindex[r.tenant_id]
+            self._expire_req(r, tidx)
+            self._tenant_live[tidx] -= 1
+            dead_bump[tidx] += 1
+            for nxt in self._tenant_queues[tidx]:
+                if not nxt.expired:  # successor inherits the wake
+                    nxt.fast = True
+                    break
+        if dead_bump.any():
+            self.qos = self.qos._replace(
+                dead=self.qos.dead + jnp.asarray(dead_bump))
+            # Credit stranded on tombstoned tickets re-enters the pool and
+            # is re-granted to live demand (skip-aware replenishment).
+            self._replenish_qos(0)
+
+    def _admit_ready_qos(self) -> list[Request]:
+        """Weighted-FCFS admission: per-tenant queues are re-examined only
+        when their head's bucket was poked by a replenish (or flagged by an
+        arrival/expiry) — the TWA gating at tenant granularity."""
+        self._expire_due_qos()
+        avail = (np.asarray(self.qos.grant).astype(np.int64)
+                 - np.asarray(self.qos.consumed).astype(np.int64))
+        seq = np.asarray(self.qos.bucket_seq)
+        admitted: list[Request] = []
+        spent = np.zeros(len(self._tenant_names), np.uint32)
+        for tidx, q in enumerate(self._tenant_queues):
+            while q and q[0].expired:
+                q.popleft()  # lazy removal of tombstoned heads
+            if not q:
+                continue
+            head = q[0]
+            if not (head.fast or seq[head.bucket] != head.observed_seq):
+                self.stats.backlog_skipped += sum(not r.expired for r in q)
+                continue
+            head.fast = False
+            head.observed_seq = int(seq[head.bucket])
+            while q and avail[tidx] - int(spent[tidx]) > 0:
+                r = q.popleft()
+                if r.expired:
+                    continue
+                spent[tidx] += 1
+                self._tenant_live[tidx] -= 1
+                self.tenant_admitted[r.tenant_id] += 1
+                admitted.append(r)
+            # examined = the head + each admitted row; everything left in
+            # the queue was never touched (the TWA skip).
+            self.stats.backlog_scans += int(spent[tidx]) + (1 if q and q[0] is head else 0)
+            self.stats.backlog_skipped += sum(not r.expired for r in q) \
+                - (1 if q and q[0] is head else 0)
+        if spent.any():
+            self.qos = self.qos._replace(
+                consumed=self.qos.consumed + jnp.asarray(spent))
+        admitted.sort(key=lambda r: (r.ticket, r.tenant_id))
+        return admitted
+
+    def _replenish_qos(self, freed: int) -> None:
+        """Slot(s) freed: reclaim credit stranded by tombstones, then
+        distribute the pool to tenants with unmet live demand by stride
+        scheduling (shares → weights under saturation); the replenish pokes
+        the TWAHash buckets of the enabled ticket windows."""
+        depths = jnp.asarray(self._tenant_live, jnp.int32)
+        self.qos, reclaimed = qos_reclaim(self.qos, depths)
+        self._qos_free += freed + int(reclaimed)
+        if self._qos_free > 0:
+            self.qos, alloc, leftover = qos_replenish(
+                self.qos, self._qos_free, depths, self.n_slots)
+            self._qos_free = int(leftover)
+            # Exact host-side wake on top of the bucket pokes: the engine
+            # knows each replenished tenant's head, so flag it directly —
+            # admission never depends on the conservative poke window alone.
+            for tidx in np.flatnonzero(np.asarray(alloc)):
+                for r in self._tenant_queues[tidx]:
+                    if not r.expired:
+                        r.fast = True
+                        break
+
     # --------------------------------------------------------- scheduler ----
 
     def _admit_ready(self):
         """Admit backlog requests whose ticket < grant. TWA-style: only
         re-examine requests whose bucket moved since they last looked."""
+        if self._tenants is not None:
+            return self._admit_ready_qos()
         if not self.backlog:
             return []
         buckets = jnp.asarray([r.bucket for r in self.backlog], jnp.int32)
@@ -170,8 +348,12 @@ class ContinuousBatchingEngine:
         self.free_slots.append(slot)
         self.stats.finished += 1
         # slot freed → post: advances grant AND pokes the bucket of the next
-        # waiting ticket (successor staging — the paper's SemaPost)
-        self.sema = post_batch(self.sema, 1)
+        # waiting ticket (successor staging — the paper's SemaPost).  In QoS
+        # mode the freed slot instead re-enters the weighted replenishment.
+        if self._tenants is not None:
+            self._replenish_qos(1)
+        else:
+            self.sema = post_batch(self.sema, 1)
         self.stats.wakeups += 1
         req.done_event.set()
         self._client_sem.post()
@@ -205,10 +387,22 @@ class ContinuousBatchingEngine:
     # ---------------------------------------------------------- telemetry ---
 
     def telemetry(self) -> dict:
-        return {
+        tel = {
             "backlog": len(self.backlog),
             "active": len(self.active),
             "free_slots": len(self.free_slots),
             "queue_depth": max(0, int(self.sema.ticket) - int(self.sema.grant)),
             "stats": self.stats.__dict__.copy(),
         }
+        if self._tenants is not None:
+            total = sum(self.tenant_admitted.values())
+            tel["backlog"] = int(self._tenant_live.sum())
+            tel["tenants"] = {
+                t: {"weight": self._tenants[t],
+                    "admitted": self.tenant_admitted[t],
+                    "expired": self.tenant_expired[t],
+                    "share": (self.tenant_admitted[t] / total) if total else 0.0,
+                    "queue_depth": int(self._tenant_live[self._tindex[t]])}
+                for t in self._tenant_names
+            }
+        return tel

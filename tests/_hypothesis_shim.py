@@ -1,0 +1,83 @@
+"""Minimal fallback for `hypothesis` so the suite collects and runs
+everywhere (hypothesis is an *optional* test dependency — see
+pyproject.toml `[project.optional-dependencies] test`).
+
+When hypothesis is installed, the real library is used (tests import it
+first and only fall back here on ImportError).  The shim draws a fixed
+number of seeded pseudo-random examples per property — no shrinking, no
+coverage guidance, far weaker than hypothesis — but it keeps the property
+assertions executing instead of crashing collection.
+"""
+
+from __future__ import annotations
+
+import random
+
+_SHIM_MAX_EXAMPLES = 15  # cap: shim examples run inside ONE test call
+_SEED = 0x7AA0B5E5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 32):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def tuples(*ss):
+        return _Strategy(lambda r: tuple(s.example(r) for s in ss))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        return _Strategy(
+            lambda r: [elements.example(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*ss):
+    def deco(fn):
+        def wrapper():
+            n = min(getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 20)),
+                    _SHIM_MAX_EXAMPLES)
+            rnd = random.Random(_SEED)
+            for _ in range(n):
+                vals = [s.example(rnd) for s in ss]
+                fn(*vals)
+        # NOT functools.wraps: pytest must see a zero-arg signature (the
+        # drawn values are not fixtures), so don't expose __wrapped__.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

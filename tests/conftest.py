@@ -1,8 +1,10 @@
 """Test bootstrap: put src/ on sys.path (tests run with or without
-PYTHONPATH=src) and keep jax on the default single CPU device — the
+PYTHONPATH=src), make the tests dir importable (the hypothesis fallback
+shim lives here), and keep jax on the default single CPU device — the
 512-device XLA flag is set ONLY by launch/dryrun.py."""
 
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))

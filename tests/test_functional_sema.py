@@ -12,8 +12,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # hypothesis is an optional test dependency (pyproject `test` extra)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.functional import (
     bucket_index,

@@ -7,8 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # hypothesis is an optional test dependency (pyproject `test` extra)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention_fwd

@@ -103,7 +103,8 @@ _MESH_EQUIV_SCRIPT = textwrap.dedent("""
 
     # 2x4 mesh (dp=2, tp=4) with FSDP
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         sc2 = steps_lib.default_step_config(cfg, shape, dp=2, accum_steps=2,
                                             param_dtype=jnp.float32, fsdp=True)
         state2 = steps_lib.make_train_state(jax.random.PRNGKey(0), cfg, sc2)

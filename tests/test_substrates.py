@@ -201,9 +201,10 @@ def test_compression_ef_residual_correctness():
     def f(g, r):
         return compress_psum(g, r, "pod", 1)
 
+    from repro import compat
     out, res = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
-                      out_specs=(jax.sharding.PartitionSpec(),) * 2)
+        compat.shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
+                         out_specs=(jax.sharding.PartitionSpec(),) * 2)
     )(g, r0)
     np.testing.assert_allclose(np.asarray(out + res), np.asarray(g), atol=1e-5)
     # quantization error bounded by scale = blockmax/127
@@ -217,10 +218,12 @@ def test_compression_unbiased_over_time():
     mesh = jax.make_mesh((1,), ("pod",))
     P = jax.sharding.PartitionSpec
 
+    from repro import compat
+
     @jax.jit
     def step(g, r):
-        return jax.shard_map(lambda g, r: compress_psum(g, r, "pod", 1),
-                             mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))(g, r)
+        return compat.shard_map(lambda g, r: compress_psum(g, r, "pod", 1),
+                                mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))(g, r)
 
     r = jnp.zeros((512,), jnp.float32)
     total_true = np.zeros(512)
