@@ -14,12 +14,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+from repro.admission.functional_qos import QoSState, make_qos, qos_take
+from repro.core.functional import live_fifo_rank, live_fifo_rank_pairwise
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.ref import decode_attention_ref, mha_ref, sema_batch_ref
+from repro.kernels.qos_admission import qos_round_fused
+from repro.kernels.ref import (
+    decode_attention_ref,
+    mha_ref,
+    qos_round_ref,
+    sema_batch_ref,
+)
 from repro.kernels.sema_batch import sema_batch
 
 VMEM_BUDGET = 16 * 2**20
+
+
+def qos_vmem(block_n, s_pad, u_pad, table):
+    """Fused qos_round working set: row blocks, tenant state, crossings,
+    the (Sp, T) permutation-poke compare, and the two tri matmuls."""
+    rows = 3 * block_n * 4 + 2 * block_n * 4            # in + out row blocks
+    tenant = (2 + 4 + 4 + 1) * s_pad * 4 + 6 * s_pad * 4  # state + scratch
+    seq = 2 * table * 4
+    crossings = s_pad * u_pad * 4 * 2                   # cross + key
+    poke = s_pad * table * 4
+    tri = block_n * block_n * 4 + s_pad * s_pad * 4
+    return rows + tenant + seq + crossings + poke + tri
+
+
+def _flops(fn, *args):
+    return compat.cost_analysis(
+        jax.jit(fn).lower(*args).compile()).get("flops", 0.0)
 
 
 def flash_vmem(block_q, block_k, hd, G):
@@ -92,6 +118,57 @@ def run(metrics: dict | None = None) -> str:
                  f"(tri-matmul rank + permutation one-hot poke)")
     if metrics is not None:
         metrics["sema_batch_exact"] = exact
+
+    # fused QoS admission round: kernel vs functional oracle (bit-exact)
+    S, N, TBL, MU, BN = 8, 512, 512, 32, 128
+    rng = np.random.default_rng(0)
+    qs = make_qos(np.linspace(1, 4, S).astype(np.float32), table_size=TBL)
+    ids = jnp.asarray(rng.integers(0, S, N), jnp.int32)
+    qs, tk, _, _ = qos_take(qs, ids, jnp.ones(N, bool))
+    alive = jnp.asarray(rng.random(N) > 0.15)
+    dls = jnp.asarray(np.where(rng.random(N) > 0.4,
+                               rng.uniform(0, 2, N), np.inf), jnp.float32)
+    ref = qos_round_ref(qs, ids, tk, alive, dls, 1.0, 24, MU)
+    ks, ka, ke, kl = qos_round_fused(qs, ids, tk, alive, dls, 1.0, 24,
+                                     max_units=MU, block_n=BN, interpret=True)
+    qexact = (
+        np.array_equal(np.asarray(ka), np.asarray(ref["admitted"]))
+        and np.array_equal(np.asarray(ke), np.asarray(ref["expired"]))
+        and int(kl) == int(ref["leftover"])
+        and all(np.array_equal(np.asarray(getattr(ks, f)),
+                               np.asarray(getattr(ref["state"], f)))
+                for f in QoSState._fields))
+    s_pad, u_pad = 128, 128
+    vm = qos_vmem(BN, s_pad, u_pad, TBL)
+    lines.append(
+        f"qos_round {N} rows × {S} tenants × {TBL} buckets: exact={qexact} "
+        f"VMEM={vm / 2**20:.2f}MiB ({'OK' if vm < VMEM_BUDGET else 'OVER'}) "
+        f"(2-phase grid: depth sweep → bit-descend stride alloc + "
+        f"permutation poke → tri-rank admit)")
+    if metrics is not None:
+        metrics["qos_round_exact"] = qexact
+
+    # reference-path asymptotics: blocked-prefix live rank vs the retained
+    # O(N²) pairwise path, measured XLA flops at N=4k (the acceptance gate:
+    # the new path must beat the old asymptotically, not just on wall time)
+    N4, S4 = 4096, 8
+    ids4 = jnp.asarray(rng.integers(0, S4, N4), jnp.int32)
+    tk4 = jnp.arange(N4, dtype=jnp.uint32)
+    al4 = jnp.asarray(rng.random(N4) > 0.2)
+    fl_new = _flops(lambda i, t, a: live_fifo_rank(i, t, a, S4), ids4, tk4, al4)
+    fl_old = _flops(live_fifo_rank_pairwise, ids4, tk4, al4)
+    if fl_old > 0:  # some backends report no cost analysis — skip, don't fail
+        assert fl_new < fl_old / 10, (
+            f"blocked-prefix rank not asymptotically better: {fl_new:.3g} vs "
+            f"pairwise {fl_old:.3g} flops at N={N4}")
+    lines.append(
+        f"live_fifo_rank N={N4} S={S4}: blocked-prefix {fl_new:.3g} flops "
+        f"vs pairwise {fl_old:.3g} ({fl_old / max(fl_new, 1):.0f}× fewer; "
+        f"O(N·S/block) vs O(N²))")
+    if metrics is not None:
+        metrics["qos_rank_flops"] = {
+            "n": N4, "s": S4, "blocked": fl_new, "pairwise": fl_old,
+            "ratio": fl_old / max(fl_new, 1.0)}
     return "\n".join(lines)
 
 

@@ -11,9 +11,17 @@ one continuous-batching engine, demonstrating
     re-examines only tenant queues whose buckets were poked (skip ratio
     printed).
 
-Run:  PYTHONPATH=src python examples/serve_multitenant.py
+Run:  PYTHONPATH=src python examples/serve_multitenant.py [--kernel]
+
+``--kernel`` (or ``ContinuousBatchingEngine(..., use_kernel=True)``) routes
+the whole tenant round — expire → weighted replenish → FCFS admit →
+reclaim — through the fused Pallas pass (`kernels.qos_admission`,
+interpret mode off-TPU) instead of the host queue walk: same admission
+semantics (bit-exact vs `functional_qos.qos_round`), one vectorized
+in-graph sweep per engine step.
 """
 
+import sys
 import time
 
 import numpy as np
@@ -23,10 +31,10 @@ from repro.serving.scheduler import ContinuousBatchingEngine, Request
 WEIGHTS = {"gold": 4.0, "silver": 2.0, "bronze": 1.0}
 
 
-def main():
+def main(use_kernel: bool = False):
     eng = ContinuousBatchingEngine(
         lambda active: np.zeros(len(active)), lambda r: None, n_slots=6,
-        tenants=WEIGHTS)
+        tenants=WEIGHTS, use_kernel=use_kernel)
     reqs, rid = [], 0
     for _ in range(120):
         for t in WEIGHTS:
@@ -69,5 +77,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(use_kernel="--kernel" in sys.argv[1:])
     print("[example] weighted-FCFS admission + tombstoned deadlines OK")

@@ -27,8 +27,11 @@ Module map (file → paper construct → what it adds):
       **deadline masks**, and the batched tombstone-skip
       (``live_fifo_rank``) so one jit-able pass runs a whole multi-tenant
       admission round (expire → weighted replenish → FCFS admit →
-      reclaim) — reference semantics for a future Pallas variant in
-      ``kernels/``.
+      reclaim) — the oracle semantics of the fused Pallas kernel
+      ``kernels/qos_admission.qos_round_fused`` (bit-exact in interpret
+      mode).  Both paths are O(N·S/block): blocked-prefix live ranks,
+      closed-form stride allocation (``stride_alloc``), and the
+      coprime-stride permutation poke (``poke_bump``).
 
 Integration points: ``serving.scheduler.ContinuousBatchingEngine``
 (``tenants=`` routes admission through the functional QoS state;
@@ -46,6 +49,7 @@ from .cancellable import (
 from .functional_qos import (
     QoSState,
     make_qos,
+    poke_bump,
     qos_admit,
     qos_bucket_index,
     qos_expire,
@@ -53,6 +57,7 @@ from .functional_qos import (
     qos_replenish,
     qos_round,
     qos_take,
+    stride_alloc,
 )
 from .hierarchical import HierarchicalTWASemaphore
 
@@ -71,4 +76,6 @@ __all__ = [
     "qos_reclaim",
     "qos_round",
     "qos_bucket_index",
+    "stride_alloc",
+    "poke_bump",
 ]

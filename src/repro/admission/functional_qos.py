@@ -13,10 +13,12 @@ State (all per-tenant vectors of length S, plus one shared waiting array):
       only via weighted replenishment from the global slot pool.
   consumed       — grant units actually used by admitted live rows;
       ``avail = grant − consumed`` is a tenant's spendable credit.
-  dead           — cumulative tombstoned (deadline-expired / cancelled)
-      tickets; used to widen the conservative bucket-poke window, exactly
-      generalizing `post_batch`'s ``[grant, grant+n)`` window (reduces to
-      it when dead == 0).
+  dead           — tombstoned (deadline-expired / cancelled) tickets not
+      yet absorbed by reclaim (dead-below-frontier slack); widens the
+      conservative bucket-poke window, exactly generalizing `post_batch`'s
+      ``[grant, grant+n)`` window (reduces to it when dead == 0), and
+      decays as reclaim burns the credit those tombstones stranded — the
+      poke cost no longer grows monotonically with total expirations.
   weight / vpass — stride scheduler: granting a unit advances the
       tenant's virtual pass by 1/weight; free units flow to the
       minimum-pass tenant with unmet live demand, so admission shares
@@ -39,10 +41,21 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..core.functional import _sdist, live_fifo_rank, twa_hash_u32
-from ..core.hashfn import MIX32KA
+from ..core.functional import (
+    _sdist,
+    live_fifo_rank,
+    live_fifo_rank_pairwise,
+    segment_counts,
+    twa_hash_u32,
+)
+from ..core.hashfn import TICKET_STRIDE, MIX32KA
 
 DEFAULT_TABLE_SIZE = 1024
+
+# 17⁻¹ mod 2³² — reduced mod any power-of-two table size it stays the
+# inverse, so ((bucket − start)·STRIDE_INV) mod T recovers a ticket's offset
+# within a poke window (the coprime-stride permutation, cf. kernels/sema_batch).
+STRIDE_INV = pow(TICKET_STRIDE, -1, 1 << 32)
 
 
 class QoSState(NamedTuple):
@@ -58,6 +71,11 @@ class QoSState(NamedTuple):
 
 def make_qos(weights, table_size: int = DEFAULT_TABLE_SIZE,
              salt: int = 0x9E3779B9) -> QoSState:
+    """Weights must be ≥ 0.  A zero-weight tenant is granted at most ONE
+    unit ever (its first virtual-pass crossing), after which its pass
+    saturates to +inf and it starves — an intentional floor semantics for
+    best-effort tiers; serving engines should validate weights > 0 (the
+    `ContinuousBatchingEngine` does)."""
     w = jnp.asarray(weights, jnp.float32)
     assert table_size > 0 and (table_size & (table_size - 1)) == 0
     z = jnp.zeros_like(w, dtype=jnp.uint32)
@@ -114,7 +132,7 @@ def qos_take(state: QoSState, tenant_ids: jax.Array, mask: jax.Array,
     ranks = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive, per tenant
     my_rank = jnp.take_along_axis(ranks, tenant_ids[:, None], axis=1)[:, 0]
     tickets = state.ticket[tenant_ids] + my_rank
-    new_ticket = state.ticket + jnp.sum(onehot, axis=0)
+    new_ticket = state.ticket + segment_counts(tenant_ids, eff, S)
     buckets = qos_bucket_index(state, tenant_ids, tickets)
     return state._replace(ticket=new_ticket), tickets, buckets, expired
 
@@ -129,10 +147,7 @@ def qos_expire(state: QoSState, tenant_ids: jax.Array, alive: jax.Array,
     Returns ``(state', alive', newly_expired)``."""
     tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
     newly = alive & (jnp.asarray(deadlines) <= now)
-    S = state.ticket.shape[0]
-    per_tenant = jnp.sum(
-        jax.nn.one_hot(tenant_ids, S, dtype=jnp.uint32)
-        * newly[:, None].astype(jnp.uint32), axis=0)
+    per_tenant = segment_counts(tenant_ids, newly, state.ticket.shape[0])
     return state._replace(dead=state.dead + per_tenant), alive & ~newly, newly
 
 
@@ -140,20 +155,77 @@ def qos_expire(state: QoSState, tenant_ids: jax.Array, alive: jax.Array,
 
 
 def qos_admit(state: QoSState, tenant_ids: jax.Array, tickets: jax.Array,
-              alive: jax.Array):
+              alive: jax.Array, *, pairwise_rank: bool = False):
     """Tombstone-transparent weighted-FCFS admission over the live backlog:
     row admitted ⇔ live_fifo_rank < avail[tenant].  Consumes the units.
-    Returns ``(state', admitted)``."""
+    Returns ``(state', admitted)``.
+
+    ``pairwise_rank=True`` routes through the retained O(N²) rank path —
+    benchmark baseline only; the default is the O(N·S/block) blocked
+    prefix (`core.functional.live_fifo_rank`)."""
     tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
     S = state.ticket.shape[0]
-    rank = live_fifo_rank(tenant_ids, jnp.asarray(tickets, jnp.uint32), alive)
+    tickets = jnp.asarray(tickets, jnp.uint32)
+    if pairwise_rank:
+        rank = live_fifo_rank_pairwise(tenant_ids, tickets, alive)
+    else:
+        rank = live_fifo_rank(tenant_ids, tickets, alive, S)
     admitted = alive & (rank < avail(state)[tenant_ids])
-    spent = jnp.sum(jax.nn.one_hot(tenant_ids, S, dtype=jnp.uint32)
-                    * admitted[:, None].astype(jnp.uint32), axis=0)
+    spent = segment_counts(tenant_ids, admitted, S)
     return state._replace(consumed=state.consumed + spent), admitted
 
 
 # -- replenish (weighted grant from the global pool) ---------------------------
+
+
+def stride_alloc(vpass: jax.Array, weight: jax.Array, unmet: jax.Array,
+                 free_units, max_units: int):
+    """Closed-form stride allocation (no ``max_units``-length sequential
+    loop): tenant s's k-th grant crosses virtual time ``vpass_s + k/w_s``,
+    so the sequential argmin schedule is exactly the merge of S arithmetic
+    sequences — take the first ``take`` crossings of the flattened (value,
+    tenant, k) sort.  A stable argsort over the (S, max_units) crossing
+    matrix reproduces the argmin tie-break (lowest tenant index first).
+
+    Non-finite crossings (zero-weight tenants past their first unit, or a
+    vpass already saturated to +inf) are never granted.  Returns
+    ``alloc (S,) u32``.
+    """
+    free_units = jnp.asarray(free_units, jnp.int32)
+    S = vpass.shape[0]
+    U = max_units
+    k = jax.lax.broadcasted_iota(jnp.float32, (S, U), 1)
+    step = jnp.where(weight[:, None] > 0, k / weight[:, None], jnp.inf)
+    step = jnp.where(k == 0, 0.0, step)  # k=0 crossing is vpass itself (0/0 guard)
+    cross = jnp.where(k < unmet[:, None].astype(jnp.float32),
+                      vpass[:, None] + step, jnp.inf)
+    finite = jnp.isfinite(cross)
+    take = jnp.minimum(
+        jnp.minimum(jnp.maximum(free_units, 0), jnp.int32(U)),
+        jnp.sum(finite).astype(jnp.int32))
+    order = jnp.argsort(cross.reshape(-1), stable=True)  # ties → (s, k) lex
+    rank = jnp.zeros((S * U,), jnp.int32).at[order].set(
+        jnp.arange(S * U, dtype=jnp.int32))
+    granted = (rank < take).reshape(S, U)
+    return jnp.sum(granted, axis=1).astype(jnp.uint32)
+
+
+def poke_bump(state: QoSState, widths: jax.Array) -> jax.Array:
+    """Waiting-array bump for per-tenant windows ``[grant_s, grant_s+w_s)``
+    via the coprime-stride permutation (the `kernels/sema_batch` trick):
+    ticket ``grant_s + k`` hashes to bucket ``(start_s + 17k) mod T``, and
+    17 is coprime with the power-of-two table, so inverting the stride
+    recovers each bucket's window offset — ``bump[j] = Σ_s [((j − start_s)
+    · 17⁻¹ mod T) < w_s]``.  A dense compare instead of the former (S, T)
+    hash-index matrix + scatter-add; windows ≥ T degrade to a full-table
+    poke (never a missed poke), exactly as before."""
+    table = state.bucket_seq.shape[-1]
+    S = state.ticket.shape[0]
+    start = twa_hash_u32(
+        tenant_salt(state, jnp.arange(S, dtype=jnp.uint32)), state.grant)
+    j = jnp.arange(table, dtype=jnp.uint32)[None, :]
+    offs = ((j - start[:, None]) * jnp.uint32(STRIDE_INV)) & jnp.uint32(table - 1)
+    return jnp.sum((offs < widths[:, None]).astype(jnp.uint32), axis=0)
 
 
 def qos_replenish(state: QoSState, free_units, live_depth: jax.Array,
@@ -162,65 +234,51 @@ def qos_replenish(state: QoSState, free_units, live_depth: jax.Array,
     tenants with unmet live demand; bump the TWAHash buckets of the
     conservatively-enabled ticket window (alloc + dead slack per tenant).
 
-    ``max_units`` bounds the jit-static loop (engine: total slot count).
-    Returns ``(state', alloc, leftover)`` — ``leftover`` units stay in the
-    caller's pool (work conservation).
+    ``max_units`` statically bounds the per-tenant grant count (engine:
+    total slot count).  Returns ``(state', alloc, leftover)`` —
+    ``leftover`` units stay in the caller's pool (work conservation).
     """
     free_units = jnp.asarray(free_units, jnp.int32)
     live_depth = jnp.asarray(live_depth, jnp.int32)
-    inf = jnp.float32(jnp.inf)
-
-    def body(i, carry):
-        vpass, alloc = carry
-        unmet = live_depth - (avail(state) + alloc.astype(jnp.int32))
-        active = (unmet > 0) & (i < free_units)
-        eff = jnp.where(active, vpass, inf)
-        j = jnp.argmin(eff)
-        can = active[j]
-        vpass = vpass.at[j].add(
-            jnp.where(can, 1.0 / state.weight[j], 0.0))
-        alloc = alloc.at[j].add(jnp.where(can, 1, 0).astype(jnp.uint32))
-        return vpass, alloc
-
-    vpass, alloc = jax.lax.fori_loop(
-        0, max_units, body,
-        (state.vpass, jnp.zeros_like(state.grant)))
+    unmet = jnp.clip(live_depth - avail(state), 0, max_units)
+    alloc = stride_alloc(state.vpass, state.weight, unmet, free_units,
+                         max_units)
+    af = alloc.astype(jnp.float32)
+    dv = jnp.where(alloc > 0,
+                   jnp.where(state.weight > 0, af / state.weight, jnp.inf),
+                   0.0)
+    vpass = state.vpass + dv
     leftover = free_units - jnp.sum(alloc).astype(jnp.int32)
 
     # Conservative successor poke: newly enabled live tickets of tenant s
-    # lie in [grant_s, grant_s + alloc_s + dead_s) — every dead ticket can
-    # shift the live frontier up by one.  Spurious pokes are benign
-    # (paper: collisions cause extra re-checks only).  The window is
-    # clamped to the issued-ticket frontier: no waiter holds a ticket
-    # ≥ `ticket`, so the cumulative dead slack stops inflating the poke
-    # cost once it passes the outstanding queue (and decays as it drains).
-    # No-lost-wakeup invariant even when the window exceeds the table:
-    # `offs` spans one full table and TICKET_STRIDE (17) is coprime with
-    # the power-of-two table size, so `table` consecutive tickets cover
-    # every bucket exactly once — a ≥table window degrades to a full-table
-    # poke (wakes everyone), never to a missed poke.
-    table = state.bucket_seq.shape[-1]
-    S = state.ticket.shape[0]
-    offs = jnp.arange(table, dtype=jnp.uint32)[None, :]  # (1, T)
+    # lie in [grant_s, grant_s + alloc_s + dead_s) — every not-yet-reclaimed
+    # dead ticket can shift the live frontier up by one (``dead`` decays as
+    # reclaim absorbs tombstone-stranded credit — see `qos_reclaim`).
+    # Spurious pokes are benign (paper: collisions cause extra re-checks
+    # only).  The window is clamped to the issued-ticket frontier: no
+    # waiter holds a ticket ≥ `ticket`.
     outstanding = jnp.maximum(_sdist(state.ticket, state.grant), 0)
     width = jnp.minimum((alloc + state.dead).astype(jnp.int32),
-                        outstanding).astype(jnp.uint32)[:, None]  # (S, 1)
-    enabled = offs < width
-    idx = qos_bucket_index(
-        state, jnp.broadcast_to(jnp.arange(S)[:, None], (S, table)),
-        state.grant[:, None] + offs)
-    bump = jnp.zeros((table,), jnp.uint32).at[idx.reshape(-1)].add(
-        enabled.reshape(-1).astype(jnp.uint32))
+                        outstanding).astype(jnp.uint32)
+    bump = poke_bump(state, width)
     return state._replace(grant=state.grant + alloc, vpass=vpass,
                           bucket_seq=state.bucket_seq + bump), alloc, leftover
 
 
 def qos_reclaim(state: QoSState, live_depth: jax.Array):
     """Burn surplus credit (granted past all live demand — stranded by
-    tombstones) back to the caller's pool.  Returns ``(state', units)``."""
+    tombstones) back to the caller's pool.  Returns ``(state', units)``.
+
+    Each reclaimed unit is credit the grant frontier carried past a dead
+    ticket, so that ticket can no longer displace a future enabled window:
+    the poke slack ``dead`` shrinks by the reclaimed amount (saturating).
+    This is the dead-below-frontier accounting — the window cost decays as
+    the tombstone backlog drains instead of growing monotonically with
+    total expirations."""
     live_depth = jnp.asarray(live_depth, jnp.int32)
     surplus = jnp.maximum(avail(state) - live_depth, 0).astype(jnp.uint32)
-    return (state._replace(consumed=state.consumed + surplus),
+    return (state._replace(consumed=state.consumed + surplus,
+                           dead=state.dead - jnp.minimum(state.dead, surplus)),
             jnp.sum(surplus).astype(jnp.int32))
 
 
@@ -229,20 +287,23 @@ def qos_reclaim(state: QoSState, live_depth: jax.Array):
 
 def qos_round(state: QoSState, tenant_ids: jax.Array, tickets: jax.Array,
               alive: jax.Array, deadlines: jax.Array, now, free_units,
-              max_units: int):
+              max_units: int, *, pairwise_rank: bool = False):
     """One whole multi-tenant admission round as a single jit-able pass:
     expire → replenish (weighted) → admit (tombstone-transparent FCFS) →
     reclaim stranded credit.  Returns
-    ``(state', admitted, expired, leftover_units)``."""
+    ``(state', admitted, expired, leftover_units)``.
+
+    This is the oracle semantics for the fused Pallas kernel
+    (`kernels.qos_admission.qos_round_fused`); ``pairwise_rank=True``
+    selects the retained O(N²) rank baseline (benchmarks only)."""
     tenant_ids = jnp.asarray(tenant_ids, jnp.int32)
     state, alive, expired = qos_expire(state, tenant_ids, alive, deadlines, now)
     S = state.ticket.shape[0]
-    depth = jnp.sum(jax.nn.one_hot(tenant_ids, S, dtype=jnp.int32)
-                    * alive[:, None].astype(jnp.int32), axis=0)
+    depth = segment_counts(tenant_ids, alive, S, dtype=jnp.int32)
     state, _, leftover = qos_replenish(state, free_units, depth, max_units)
-    state, admitted = qos_admit(state, tenant_ids, tickets, alive)
-    depth_after = depth - jnp.sum(
-        jax.nn.one_hot(tenant_ids, S, dtype=jnp.int32)
-        * admitted[:, None].astype(jnp.int32), axis=0)
+    state, admitted = qos_admit(state, tenant_ids, tickets, alive,
+                                pairwise_rank=pairwise_rank)
+    depth_after = depth - segment_counts(tenant_ids, admitted, S,
+                                         dtype=jnp.int32)
     state, reclaimed = qos_reclaim(state, depth_after)
     return state, admitted, expired, leftover + reclaimed

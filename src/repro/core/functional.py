@@ -163,17 +163,92 @@ def post_batch_multi(state: MultiSemaState, counts: jax.Array) -> MultiSemaState
     return state._replace(grant=state.grant + jnp.asarray(counts, jnp.uint32))
 
 
+def segment_counts(ids: jax.Array, mask: jax.Array, num_segments: int,
+                   dtype=jnp.uint32) -> jax.Array:
+    """Per-segment count of mask-true rows — the shared per-tenant reduction
+    used throughout `admission.functional_qos` (take/expire/admit/round all
+    need "how many flagged rows per tenant").  A segment-sum instead of the
+    former ``sum(one_hot(ids) * mask)`` idiom: no (N, S) materialization."""
+    return jax.ops.segment_sum(
+        jnp.asarray(mask).astype(dtype), jnp.asarray(ids, jnp.int32),
+        num_segments=num_segments)
+
+
+def ticket_order(sema_ids: jax.Array, tickets: jax.Array,
+                 num_semas: int) -> jax.Array:
+    """Stable permutation putting every semaphore's rows in wrap-safe ticket
+    order (cross-semaphore interleaving is arbitrary — per-semaphore prefix
+    counts don't care).  The key is the signed ticket distance from the
+    semaphore's first-seen ticket, valid while a semaphore's outstanding
+    tickets span < 2³¹ (the module-wide counter invariant).  Shared by
+    `live_fifo_rank` and the `kernels.qos_admission` wrapper — the two must
+    sort identically for the kernel's bit-exactness."""
+    n = tickets.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    sema_ids = jnp.asarray(sema_ids, jnp.int32)
+    tickets = jnp.asarray(tickets, jnp.uint32)
+    first_row = jnp.full((num_semas,), n, jnp.int32).at[sema_ids].min(
+        jnp.arange(n, dtype=jnp.int32))
+    ref = tickets[jnp.clip(first_row, 0, n - 1)]  # (S,) u32
+    key = _sdist(tickets, ref[sema_ids])
+    return jnp.argsort(key, stable=True)
+
+
 def live_fifo_rank(sema_ids: jax.Array, tickets: jax.Array,
-                   alive: jax.Array) -> jax.Array:
+                   alive: jax.Array, num_semas: int,
+                   block: int = 512) -> jax.Array:
     """Rank of each row among the *alive* rows of its semaphore, in ticket
     order — the batched form of the tombstone-skip: dead (cancelled /
     deadline-expired) tickets are transparent, so grant units flow to the
     earliest live waiters and FCFS among live tickets is preserved exactly.
-
-    O(N²·S/…) via a pairwise comparison — reference semantics; the Pallas
-    variant would use the blocked-prefix structure of `take_batch_multi`.
     Dead rows get rank N (never admitted by a `< avail` test).
+
+    O(N·S/block) two-level blocked prefix (the `take_batch_multi`
+    structure) over a per-tenant ticket-order argsort:
+
+      1. wrap-safe sort key: signed ticket distance from the tenant's
+         first-seen ticket (valid while a tenant's outstanding tickets span
+         < 2³¹ — the module-wide counter invariant);
+      2. stable argsort puts every tenant's rows in ticket order (ties
+         across tenants are irrelevant — counts are per tenant);
+      3. alive-masked (nb, block, S) one-hot two-level prefix gives each
+         sorted row its exclusive count of earlier live same-tenant rows;
+      4. scatter back through the inverse permutation.
+
+    The former O(N²) pairwise comparison is kept as
+    :func:`live_fifo_rank_pairwise` (equivalence tests + benchmarks).
+    Tickets are assumed unique within a tenant (they are consecutive
+    counter values by construction).
     """
+    n = tickets.shape[0]
+    sema_ids = jnp.asarray(sema_ids, jnp.int32)
+    tickets = jnp.asarray(tickets, jnp.uint32)
+    S = num_semas
+    order = ticket_order(sema_ids, tickets, S)
+
+    ids_s = sema_ids[order]
+    alive_s = alive[order]
+    pad = (-n) % block
+    ids_p = jnp.pad(ids_s, (0, pad))
+    alive_p = jnp.pad(alive_s, (0, pad))
+    nb = (n + pad) // block
+    onehot = (jax.nn.one_hot(ids_p, S, dtype=jnp.uint32)
+              * alive_p[:, None].astype(jnp.uint32)).reshape(nb, block, S)
+    intra = jnp.cumsum(onehot, axis=1)  # inclusive within block
+    block_tot = intra[:, -1, :]  # (nb, S)
+    base = jnp.cumsum(block_tot, axis=0) - block_tot  # exclusive block base
+    ranks = (base[:, None, :] + intra - onehot).reshape(-1, S)[:n]
+    my = jnp.take_along_axis(ranks, ids_s[:, None], axis=1)[:, 0]
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(my.astype(jnp.int32))
+    return jnp.where(alive, rank, jnp.int32(n))
+
+
+def live_fifo_rank_pairwise(sema_ids: jax.Array, tickets: jax.Array,
+                            alive: jax.Array) -> jax.Array:
+    """O(N²) pairwise-comparison form of :func:`live_fifo_rank` — retained
+    as the equivalence oracle and the benchmark baseline the blocked-prefix
+    path is measured against (BENCH trajectory: qos_round scaling)."""
     n = tickets.shape[0]
     same = sema_ids[:, None] == sema_ids[None, :]
     before = _sdist(tickets[:, None], tickets[None, :]) > 0  # ticket_j < ticket_i

@@ -11,9 +11,11 @@ from __future__ import annotations
 import os
 
 import jax
+import numpy as np
 
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention_fwd as _flash_attention_fwd
+from .qos_admission import qos_round_fused as _qos_round_fused
 from .sema_batch import sema_batch as _sema_batch
 
 
@@ -40,6 +42,28 @@ def sema_batch(ticket, grant, bucket_seq, requests, post_n, salt, *, block_n=512
         ticket, grant, bucket_seq, requests, post_n, salt,
         block_n=block_n, interpret=_interpret(),
     )
+
+
+def qos_round(state, tenant_ids, tickets, alive, deadlines, now, free_units,
+              *, max_units: int, block_n: int = 256):
+    """Fused multi-tenant QoS admission round (expire → weighted replenish →
+    FCFS admit → reclaim) — `kernels.qos_admission.qos_round_fused` with the
+    backlog padded to the block grid OUTSIDE the jit boundary, so an
+    engine's shrinking backlog reuses a handful of compiled shapes instead
+    of retracing per length.  Padded rows are dead (alive=False) and cannot
+    be admitted, expired, or counted."""
+    n = len(tenant_ids)
+    npad = -(-max(n, 1) // block_n) * block_n
+    pad = npad - n
+    ids = np.pad(np.asarray(tenant_ids, np.int32), (0, pad))
+    tks = np.pad(np.asarray(tickets, np.uint32), (0, pad))
+    alv = np.pad(np.asarray(alive, bool), (0, pad))
+    dls = np.pad(np.asarray(deadlines, np.float32), (0, pad),
+                 constant_values=np.inf)
+    state2, admitted, expired, leftover = _qos_round_fused(
+        state, ids, tks, alv, dls, now, free_units,
+        max_units=max_units, block_n=block_n, interpret=_interpret())
+    return state2, admitted[:n], expired[:n], leftover
 
 
 def pallas_enabled() -> bool:

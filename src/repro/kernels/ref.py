@@ -54,6 +54,32 @@ def sema_batch_ref(ticket, grant, bucket_seq, requests, post_n, salt):
     }
 
 
+# ------------------------------------------------------------- qos_round ----
+
+
+def qos_round_ref(state, tenant_ids, tickets, alive, deadlines, now,
+                  free_units, max_units: int):
+    """Oracle for the fused multi-tenant QoS admission round — delegates to
+    `admission.functional_qos.qos_round` (the reference semantics the
+    `kernels/qos_admission` Pallas kernel must match bit-exactly: expire →
+    weighted stride replenish → tombstone-transparent FCFS admit → reclaim).
+
+    Returns dict with the new QoSState and per-row admitted/expired masks
+    plus the leftover (work-conserving) unit count.
+    """
+    from ..admission.functional_qos import qos_round
+
+    state2, admitted, expired, leftover = qos_round(
+        state, tenant_ids, tickets, alive, deadlines, now, free_units,
+        max_units)
+    return {
+        "state": state2,
+        "admitted": admitted,
+        "expired": expired,
+        "leftover": leftover,
+    }
+
+
 # -------------------------------------------------------- flash attention ---
 
 

@@ -27,7 +27,10 @@ bucket array gating which tenant queues the loop re-examines, and
 deadline-expired backlog entries tombstoned so they never block later
 live tickets (the skip-aware grant of the tombstone protocol).  FCFS holds
 within a tenant; across tenants admission shares converge to the weights
-under saturation.
+under saturation.  With ``use_kernel=True`` the whole tenant round
+(expire → replenish → admit → reclaim) runs as the fused Pallas pass
+(`kernels.qos_admission`, interpret-mode off-TPU) instead of the host
+queue walk — same admission semantics, one vectorized in-graph sweep.
 
 The engine below is deliberately model-agnostic: `step_fn` is any callable
 (tokens, positions, caches) → (logits, caches); tests drive it with a tiny
@@ -115,6 +118,14 @@ class ContinuousBatchingEngine:
         # --- multi-tenant QoS admission (admission.functional_qos) ---
         self._tenants = tenants
         if tenants is not None:
+            # weight 0 is meaningful at the functional layer (at most one
+            # unit, then the virtual pass saturates to +inf) but in a
+            # serving engine it means silent starvation — reject it here.
+            bad = {t: w for t, w in tenants.items() if not w > 0}
+            if bad:
+                raise ValueError(
+                    f"tenant weights must be > 0, got {bad}; zero-weight "
+                    "tenants would starve after at most one admission")
             self._tenant_names = list(tenants)
             self._tindex = {t: i for i, t in enumerate(self._tenant_names)}
             self.qos = make_qos([tenants[t] for t in self._tenant_names],
@@ -208,11 +219,28 @@ class ContinuousBatchingEngine:
                 r.fast = True  # fresh arrival: examine once on next pass
                 self._tenant_queues[i].append(r)
                 self._tenant_live[i] += 1
-                if r.deadline is not None:
+                # the kernel round re-evaluates every deadline in-graph each
+                # step — the host expiry heap would only leak entries there
+                if r.deadline is not None and not self._use_kernel:
                     heapq.heappush(self._deadline_heap, (r.deadline, r.rid, r))
             # Undistributed slots flow to the new demand immediately (the
             # work-conserving fast path of the hierarchy).
             self._replenish_qos(0)
+
+    def _fcfs_sort(self, reqs: list[Request]) -> None:
+        """Sort admitted requests into wrap-safe admission order: signed
+        ticket distance from the tenant's grant frontier (tickets are u32
+        and may cross 2³²; raw comparison would order a post-wrap ticket
+        before its predecessor).  Cross-tenant ordering is cosmetic — FCFS
+        is a per-tenant invariant.  The grant snapshot is taken ONCE (one
+        device→host transfer per round, not per request)."""
+        grants = np.asarray(self.qos.grant)
+
+        def key(r: Request):
+            d = (r.ticket - int(grants[self._tindex[r.tenant_id]])) & 0xFFFFFFFF
+            return (d - (1 << 32) if d >= (1 << 31) else d, r.tenant_id)
+
+        reqs.sort(key=key)
 
     def _expire_req(self, r: Request, tidx: int) -> None:
         r.expired = True
@@ -246,13 +274,61 @@ class ContinuousBatchingEngine:
             # is re-granted to live demand (skip-aware replenishment).
             self._replenish_qos(0)
 
+    def _admit_ready_qos_kernel(self) -> list[Request]:
+        """Fused in-graph admission round (``use_kernel=True``): expire,
+        weighted replenish, tombstone-transparent FCFS admit and reclaim run
+        as ONE `kernels.qos_admission` pass over the whole backlog —
+        O(N·S/block) vectorized work instead of the host-side queue walk
+        (every row is examined, but in-graph; the TWA bucket gating of the
+        host path is subsumed by the kernel's blocked live-rank sweep)."""
+        from ..kernels.ops import qos_round as qos_round_kernel
+
+        rows = [r for q in self._tenant_queues for r in q if not r.expired]
+        if not rows:
+            return []
+        now = time.monotonic()
+        ids = np.asarray([self._tindex[r.tenant_id] for r in rows], np.int32)
+        tks = np.asarray([r.ticket for r in rows], np.uint32)
+        # relative deadlines: see _submit_qos on float32 precision
+        dls = np.asarray([np.inf if r.deadline is None else r.deadline - now
+                          for r in rows], np.float32)
+        state, admitted, expired, leftover = qos_round_kernel(
+            self.qos, ids, tks, np.ones(len(rows), bool), dls, 0.0,
+            self._qos_free, max_units=self.n_slots)
+        self.qos = state
+        self._qos_free = int(leftover)
+        self.stats.backlog_scans += len(rows)
+        admitted = np.asarray(admitted)
+        expired = np.asarray(expired)
+        out: list[Request] = []
+        for r, i, a, e in zip(rows, ids, admitted, expired):
+            if e:
+                self._expire_req(r, int(i))
+                self._tenant_live[int(i)] -= 1
+            elif a:
+                self._tenant_live[int(i)] -= 1
+                self.tenant_admitted[r.tenant_id] += 1
+                out.append(r)
+        if admitted.any() or expired.any():
+            gone = {id(r) for r, a, e in zip(rows, admitted, expired) if a or e}
+            for tidx, q in enumerate(self._tenant_queues):
+                self._tenant_queues[tidx] = deque(
+                    r for r in q if id(r) not in gone)
+        self._fcfs_sort(out)
+        return out
+
     def _admit_ready_qos(self) -> list[Request]:
         """Weighted-FCFS admission: per-tenant queues are re-examined only
         when their head's bucket was poked by a replenish (or flagged by an
         arrival/expiry) — the TWA gating at tenant granularity."""
+        if self._use_kernel:
+            return self._admit_ready_qos_kernel()
         self._expire_due_qos()
-        avail = (np.asarray(self.qos.grant).astype(np.int64)
-                 - np.asarray(self.qos.consumed).astype(np.int64))
+        # wrap-safe spendable credit: u32 difference reinterpreted signed
+        # (mirrors functional_qos.avail's _sdist — a raw widened subtraction
+        # would go hugely negative once grant crosses 2³²)
+        avail = (np.asarray(self.qos.grant) - np.asarray(self.qos.consumed)
+                 ).astype(np.int32).astype(np.int64)
         seq = np.asarray(self.qos.bucket_seq)
         admitted: list[Request] = []
         spent = np.zeros(len(self._tenant_names), np.uint32)
@@ -283,7 +359,7 @@ class ContinuousBatchingEngine:
         if spent.any():
             self.qos = self.qos._replace(
                 consumed=self.qos.consumed + jnp.asarray(spent))
-        admitted.sort(key=lambda r: (r.ticket, r.tenant_id))
+        self._fcfs_sort(admitted)
         return admitted
 
     def _replenish_qos(self, freed: int) -> None:
@@ -291,6 +367,11 @@ class ContinuousBatchingEngine:
         distribute the pool to tenants with unmet live demand by stride
         scheduling (shares → weights under saturation); the replenish pokes
         the TWAHash buckets of the enabled ticket windows."""
+        if self._use_kernel:
+            # the fused kernel round replenishes in-graph each step — just
+            # bank the freed slot(s) for the next round's pool
+            self._qos_free += freed
+            return
         depths = jnp.asarray(self._tenant_live, jnp.int32)
         self.qos, reclaimed = qos_reclaim(self.qos, depths)
         self._qos_free += freed + int(reclaimed)
