@@ -12,6 +12,7 @@ one continuous-batching engine, demonstrating
     printed).
 
 Run:  PYTHONPATH=src python examples/serve_multitenant.py [--kernel]
+                                                          [--megastep]
 
 ``--kernel`` (or ``ContinuousBatchingEngine(..., use_kernel=True)``) routes
 the whole tenant round — expire → weighted replenish → FCFS admit →
@@ -19,6 +20,18 @@ reclaim — through the fused Pallas pass (`kernels.qos_admission`,
 interpret mode off-TPU) instead of the host queue walk: same admission
 semantics (bit-exact vs `functional_qos.qos_round`), one vectorized
 in-graph sweep per engine step.
+
+Device-resident engine (``--megastep``): the whole engine LOOP moves
+in-graph — ``eng.megastep(K)`` runs K fused rounds (deadline preemption →
+QoS admission → TWA slot assignment → decode+sample → completion) as one
+jitted `lax.scan` over a donated on-device EngineState pytree
+(`serving.engine_state`), so the host syncs once per K decoded tokens
+instead of once per token.  Semantics are property-tested identical to K
+sequential ``step()`` calls (tests/test_megastep.py); throughput vs K is
+measured in `benchmarks/serving_bench.py` (≥5× at K=32 on CPU).  Custom
+in-graph models plug in via ``token_fn``/``admit_fn`` — see
+`engine_state.paged_attn_token_fn` for paged decode attention with
+in-graph prompt prefill.
 """
 
 import sys
@@ -31,7 +44,7 @@ from repro.serving.scheduler import ContinuousBatchingEngine, Request
 WEIGHTS = {"gold": 4.0, "silver": 2.0, "bronze": 1.0}
 
 
-def main(use_kernel: bool = False):
+def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16):
     eng = ContinuousBatchingEngine(
         lambda active: np.zeros(len(active)), lambda r: None, n_slots=6,
         tenants=WEIGHTS, use_kernel=use_kernel)
@@ -54,13 +67,18 @@ def main(use_kernel: bool = False):
     while eng.stats.finished + eng.stats.expired < total and steps < 50 * total:
         if sat_admitted is None and not all(d > 0 for d in eng._tenant_live):
             sat_admitted = dict(eng.tenant_admitted)  # saturation window ends
-        eng.step(lambda lg: np.zeros(len(lg), np.int64))
-        steps += 1
+        if use_megastep:
+            eng.megastep(K)  # one host sync per K decode rounds
+            steps += K
+        else:
+            eng.step(lambda lg: np.zeros(len(lg), np.int64))
+            steps += 1
 
     tel = eng.telemetry()
     wsum = sum(WEIGHTS.values())
     stot = sum(sat_admitted.values())
-    print(f"served {eng.stats.finished} requests in {steps} engine steps; "
+    print(f"served {eng.stats.finished} requests in {steps} engine rounds "
+          f"({eng.stats.host_syncs} host syncs); "
           f"{eng.stats.expired} deadline-expired (tombstoned)")
     print(f"{'tenant':>8} {'weight':>7} {'sat-share':>10} {'target':>7} "
           f"{'expired':>8}")
@@ -73,9 +91,11 @@ def main(use_kernel: bool = False):
     print(f"scheduler examined {s.backlog_scans} rows, skipped "
           f"{s.backlog_skipped} (TWA bucket gating at tenant granularity)")
     assert eng.stats.expired == 8 and eng.stats.finished == len(reqs)
+    assert tel["queue_depth"] == 0
     return eng
 
 
 if __name__ == "__main__":
-    main(use_kernel="--kernel" in sys.argv[1:])
+    main(use_kernel="--kernel" in sys.argv[1:],
+         use_megastep="--megastep" in sys.argv[1:])
     print("[example] weighted-FCFS admission + tombstoned deadlines OK")

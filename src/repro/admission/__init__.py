@@ -56,6 +56,7 @@ from .functional_qos import (
     qos_reclaim,
     qos_replenish,
     qos_round,
+    qos_scan_round,
     qos_take,
     stride_alloc,
 )
@@ -75,6 +76,7 @@ __all__ = [
     "qos_replenish",
     "qos_reclaim",
     "qos_round",
+    "qos_scan_round",
     "qos_bucket_index",
     "stride_alloc",
     "poke_bump",

@@ -285,6 +285,29 @@ def qos_reclaim(state: QoSState, live_depth: jax.Array):
 # -- one fused admission round -------------------------------------------------
 
 
+def qos_scan_round(state: QoSState, tenant_ids: jax.Array,
+                   tickets: jax.Array, alive: jax.Array,
+                   deadlines: jax.Array, now, free_pool, released,
+                   max_units: int, *, round_impl=None):
+    """One admission round with **slot-release feedback**: ``released``
+    units freed by decode completions/preemptions *this* round re-enter
+    the pool consumed by the SAME round's weighted replenish, so a slot
+    reclaimed mid-scan is re-granted to the next live ticket without a
+    host round-trip (the megastep's in-graph counterpart of the engine's
+    ``_replenish_qos(freed)``).
+
+    ``round_impl`` selects the round implementation (default
+    :func:`qos_round`; the scheduler substitutes the fused Pallas pass
+    `kernels.qos_admission.qos_round_fused` on TPU — bit-identical).
+    Returns ``(state', admitted, expired, leftover_units)``.
+    """
+    free = (jnp.asarray(free_pool, jnp.int32)
+            + jnp.asarray(released, jnp.int32))
+    impl = round_impl if round_impl is not None else qos_round
+    return impl(state, tenant_ids, tickets, alive, deadlines, now, free,
+                max_units)
+
+
 def qos_round(state: QoSState, tenant_ids: jax.Array, tickets: jax.Array,
               alive: jax.Array, deadlines: jax.Array, now, free_units,
               max_units: int, *, pairwise_rank: bool = False):

@@ -33,6 +33,13 @@ from .hashfn import TICKET_STRIDE
 DEFAULT_TABLE_SIZE = 1024
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ n (shape-bucketing helper: the kernel
+    backlog padding and the megastep (B, P) buckets must round the same
+    way so steady-state serving reuses compiled executables)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class SemaState(NamedTuple):
     """One functional semaphore (or a vector of them if leading dims agree)."""
 

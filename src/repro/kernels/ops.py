@@ -13,9 +13,11 @@ import os
 import jax
 import numpy as np
 
+from ..core.functional import next_pow2 as _next_pow2
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention_fwd as _flash_attention_fwd
 from .qos_admission import qos_round_fused as _qos_round_fused
+from .qos_admission import qos_round_scan as _qos_round_scan
 from .sema_batch import sema_batch as _sema_batch
 
 
@@ -44,26 +46,51 @@ def sema_batch(ticket, grant, bucket_seq, requests, post_n, salt, *, block_n=512
     )
 
 
-def qos_round(state, tenant_ids, tickets, alive, deadlines, now, free_units,
-              *, max_units: int, block_n: int = 256):
-    """Fused multi-tenant QoS admission round (expire → weighted replenish →
-    FCFS admit → reclaim) — `kernels.qos_admission.qos_round_fused` with the
-    backlog padded to the block grid OUTSIDE the jit boundary, so an
-    engine's shrinking backlog reuses a handful of compiled shapes instead
-    of retracing per length.  Padded rows are dead (alive=False) and cannot
-    be admitted, expired, or counted."""
+def _pad_backlog(tenant_ids, tickets, alive, deadlines, block_n: int):
+    """Pad a backlog to the next power of two ≥ block_n, padded rows dead
+    (alive=False ⇒ never admitted, expired, or counted).  Steady-state
+    serving (backlog ≤ block_n) therefore hits ONE compiled executable for
+    every distinct length, and a draining 10k-deep backlog touches
+    log₂(N/block_n) shapes instead of one per multiple of block_n —
+    compile-cache hits asserted in tests/test_megastep.py."""
     n = len(tenant_ids)
-    npad = -(-max(n, 1) // block_n) * block_n
-    pad = npad - n
+    pad = max(block_n, _next_pow2(n)) - n
     ids = np.pad(np.asarray(tenant_ids, np.int32), (0, pad))
     tks = np.pad(np.asarray(tickets, np.uint32), (0, pad))
     alv = np.pad(np.asarray(alive, bool), (0, pad))
     dls = np.pad(np.asarray(deadlines, np.float32), (0, pad),
                  constant_values=np.inf)
+    return ids, tks, alv, dls
+
+
+def qos_round(state, tenant_ids, tickets, alive, deadlines, now, free_units,
+              *, max_units: int, block_n: int = 256):
+    """Fused multi-tenant QoS admission round (expire → weighted replenish →
+    FCFS admit → reclaim) — `kernels.qos_admission.qos_round_fused` with the
+    backlog padded OUTSIDE the jit boundary (see `_pad_backlog`)."""
+    n = len(tenant_ids)
+    ids, tks, alv, dls = _pad_backlog(tenant_ids, tickets, alive, deadlines,
+                                      block_n)
     state2, admitted, expired, leftover = _qos_round_fused(
         state, ids, tks, alv, dls, now, free_units,
         max_units=max_units, block_n=block_n, interpret=_interpret())
     return state2, admitted[:n], expired[:n], leftover
+
+
+def qos_round_scan(state, tenant_ids, tickets, alive, deadlines, nows,
+                   free_units, released, *, max_units: int,
+                   block_n: int = 256):
+    """Batch-of-K fused admission rounds (`kernels.qos_admission.
+    qos_round_scan`) with the same power-of-two backlog padding — the
+    megastep admission spine as a standalone entry point.  Returns
+    ``(state', admit_round[:n], expire_round[:n], free')``."""
+    n = len(tenant_ids)
+    ids, tks, alv, dls = _pad_backlog(tenant_ids, tickets, alive, deadlines,
+                                      block_n)
+    state2, admit_round, expire_round, free = _qos_round_scan(
+        state, ids, tks, alv, dls, nows, free_units, released,
+        max_units=max_units, block_n=block_n, interpret=_interpret())
+    return state2, admit_round[:n], expire_round[:n], free
 
 
 def pallas_enabled() -> bool:

@@ -297,3 +297,44 @@ def qos_round_fused(state, tenant_ids, tickets, alive, deadlines, now,
         grant=out_u[0, :S], consumed=out_u[1, :S], dead=out_u[2, :S],
         vpass=out_vp[0, :S], bucket_seq=out_seq[0])
     return new_state, admitted, expired, out_scal[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_units", "block_n", "interpret"))
+def qos_round_scan(state, tenant_ids, tickets, alive, deadlines, nows,
+                   free_units, released, *, max_units: int,
+                   block_n: int = 256, interpret: bool = False):
+    """Batch-of-rounds entry point: K fused admission rounds as ONE jitted
+    `lax.scan` over the kernel, with static padded shapes throughout — the
+    megastep's admission spine (oracle: `ref.qos_round_scan_ref`, i.e. K
+    sequential `functional_qos.qos_round` calls — bit-identical).
+
+    Per round k: rows admitted/expired leave the alive set for round k+1;
+    ``released[k]`` units (slot completions/preemptions fed back by the
+    engine) join the carried free pool BEFORE the round's replenish (the
+    `functional_qos.qos_scan_round` feedback contract); the leftover pool
+    carries.  ``nows``: (K,) f32.  Returns ``(state', admit_round (N,)
+    i32, expire_round (N,) i32, free')`` where round indices are -1 for
+    rows never admitted/expired.
+    """
+    N = tenant_ids.shape[0]
+    nows = jnp.asarray(nows, jnp.float32)
+    released = jnp.asarray(released, jnp.int32)
+    alive = jnp.asarray(alive, bool)
+    free0 = jnp.asarray(free_units, jnp.int32)
+
+    def body(carry, x):
+        st, aliv, free = carry
+        now, rel = x
+        st, adm, exp, leftover = qos_round_fused(
+            st, tenant_ids, tickets, aliv, deadlines, now, free + rel,
+            max_units=max_units, block_n=block_n, interpret=interpret)
+        return (st, aliv & ~adm & ~exp, leftover), (adm, exp)
+
+    (state, _, free), (adm_k, exp_k) = jax.lax.scan(
+        body, (state, alive, free0), (nows, released))
+    # (K, N) event masks → first (only) round index per row, -1 if never
+    admit_round = jnp.where(adm_k.any(0), jnp.argmax(adm_k, axis=0), -1)
+    expire_round = jnp.where(exp_k.any(0), jnp.argmax(exp_k, axis=0), -1)
+    return state, admit_round.astype(jnp.int32), \
+        expire_round.astype(jnp.int32), free

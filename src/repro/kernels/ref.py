@@ -7,6 +7,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 MASK32 = (1 << 32) - 1
 TICKET_STRIDE = 17
@@ -77,6 +78,37 @@ def qos_round_ref(state, tenant_ids, tickets, alive, deadlines, now,
         "admitted": admitted,
         "expired": expired,
         "leftover": leftover,
+    }
+
+
+def qos_round_scan_ref(state, tenant_ids, tickets, alive, deadlines, nows,
+                       free_units, released, max_units: int):
+    """Oracle for the batch-of-rounds scan (`kernels.qos_admission.
+    qos_round_scan`): K sequential `functional_qos.qos_round` calls — each
+    round's admitted/expired rows leave the alive set, each round's
+    released units join the pool before its replenish, and the leftover
+    pool carries.  Returns dict with the final state, per-row
+    admit/expire round indices (-1 = never), and the final free pool."""
+    from ..admission.functional_qos import qos_scan_round
+
+    n = tickets.shape[0]
+    alive = jnp.asarray(alive, bool)
+    free = jnp.asarray(free_units, jnp.int32)
+    admit_round = np.full(n, -1, np.int32)
+    expire_round = np.full(n, -1, np.int32)
+    for k in range(len(nows)):
+        state, adm, exp, free = qos_scan_round(
+            state, tenant_ids, tickets, alive, deadlines, nows[k], free,
+            released[k], max_units)
+        adm_np, exp_np = np.asarray(adm), np.asarray(exp)
+        admit_round[adm_np] = k
+        expire_round[exp_np] = k
+        alive = alive & ~adm & ~exp
+    return {
+        "state": state,
+        "admit_round": jnp.asarray(admit_round),
+        "expire_round": jnp.asarray(expire_round),
+        "free": free,
     }
 
 

@@ -1,0 +1,401 @@
+"""Device-resident decode megastep — the engine loop itself as a pure,
+scanned JAX program.
+
+`ContinuousBatchingEngine.step()` pays a full host round-trip per decoded
+token: Python queue bookkeeping, one dispatch, host-side sampling, per-slot
+loops.  The paper's whole point (TWA semaphores make admission latency
+near-zero) is squandered if every admission round is bracketed by
+milliseconds of host sync.  This module moves the engine in-graph: ONE
+jitted `lax.scan` over K decode iterations where all per-slot engine state
+lives in a donated on-device :class:`EngineState` pytree, and each scanned
+round fuses
+
+  (a) the in-graph multi-tenant QoS admission round (the
+      `admission.functional_qos.qos_round` semantics; on TPU the fused
+      Pallas pass `kernels.qos_admission.qos_round_fused` — bit-identical,
+      see tests/test_qos_kernel.py);
+  (b) slot assignment gated by the free-slot TWA semaphore
+      (`core.functional` take/post — the reference semantics of the
+      `kernels/sema_batch` fused pass): completions/preemptions `post`,
+      admissions `take`, and ``grant − ticket`` is the physical free-slot
+      count by the paper's counter identity;
+  (c) decode + sampling through a caller-supplied jittable ``token_fn``
+      (`make_paged_attn_token_fn` demonstrates paged single-token decode
+      attention over a per-slot ring KV cache with in-graph prompt
+      prefill);
+  (d) completion AND deadline detection: sequences that hit ``max_new``
+      or whose deadline passes mid-decode are tombstoned in-graph and
+      their slots posted back into the SAME scanned round machinery —
+      a preempted slot's unit re-enters the pool feeding this round's
+      replenish, so the next live ticket is re-granted without any host
+      involvement (the ROADMAP's deadline-aware decode preemption).
+
+The host syncs once per K tokens — launch plus one drain of the
+(K, S) token/event buffers — instead of once per token.
+
+Round order (must mirror `ContinuousBatchingEngine.step()` exactly —
+property-tested in tests/test_megastep.py):
+
+  preempt expired running slots  →  QoS admission round (freed units feed
+  the same round's replenish)  →  assign free slots to admitted rows in
+  wrap-safe FCFS order  →  decode + sample every busy slot  →  retire
+  completed slots (their units bank for the next round, exactly the
+  host engine's ``_qos_free`` in kernel mode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..admission.functional_qos import QoSState, qos_scan_round
+from ..core.functional import SemaState, _sdist, make_sema, post_batch, take_batch
+
+# admission-order sort key packs (clamped ticket distance, tenant index)
+# into one int32: distances beyond ±2²⁰ cannot occur for admitted rows
+# (bounded by outstanding grant ≪ backlog capacity), tenant index < 256.
+_D_CLAMP = 1 << 20
+_T_BITS = 8
+
+
+class Backlog(NamedTuple):
+    """Waiting requests, device-resident (static capacity B ≥ S)."""
+
+    valid: jax.Array         # (B,) bool — ticketed, not yet admitted/expired
+    tenant: jax.Array        # (B,) i32
+    ticket: jax.Array        # (B,) u32
+    deadline: jax.Array      # (B,) f32 — relative to the megastep epoch
+    rid: jax.Array           # (B,) i32
+    max_new: jax.Array       # (B,) i32
+    prompt: jax.Array        # (B, P) i32 — padded prompt tokens
+    prompt_len: jax.Array    # (B,) i32
+    admit_round: jax.Array   # (B,) i32 — global round of admission (-1)
+    expire_round: jax.Array  # (B,) i32 — global round of expiry (-1)
+    slot: jax.Array          # (B,) i32 — slot assigned at admission (-1)
+
+
+class Slots(NamedTuple):
+    """Per-slot decode state (S rows of the batched KV cache)."""
+
+    busy: jax.Array      # (S,) bool
+    row: jax.Array       # (S,) i32 — backlog row served (B+s ⇒ active at launch)
+    rid: jax.Array       # (S,) i32
+    tenant: jax.Array    # (S,) i32
+    deadline: jax.Array  # (S,) f32 — decode deadline (preemption), epoch-relative
+    max_new: jax.Array   # (S,) i32
+    emitted: jax.Array   # (S,) i32 — tokens emitted so far
+    token: jax.Array     # (S,) i32 — last token (next decode input)
+    pos: jax.Array       # (S,) i32 — KV write cursor / absolute position
+
+
+class EngineState(NamedTuple):
+    """The donated on-device engine pytree carried through the scan."""
+
+    qos: QoSState        # per-tenant semaphores + shared waiting array
+    slot_sema: SemaState  # free-slot TWA semaphore (grant − ticket = free)
+    free: jax.Array      # i32 scalar — undistributed global slot pool
+    round_no: jax.Array  # i32 scalar — global engine round counter
+    backlog: Backlog
+    slots: Slots
+
+
+class RoundOut(NamedTuple):
+    """Per-iteration scan outputs drained by the host once per megastep."""
+
+    tokens: jax.Array  # (S,) i32 — token emitted by each slot this round
+    emit: jax.Array    # (S,) bool — slot decoded this round
+    fin: jax.Array     # (S,) bool — slot completed (hit max_new) this round
+    pre: jax.Array     # (S,) bool — slot deadline-preempted this round
+    row: jax.Array     # (S,) i32 — backlog row at emit time
+    prerow: jax.Array  # (S,) i32 — backlog row at preemption time
+    n_live: jax.Array  # i32 — backlog rows examined by the admission round
+    n_active: jax.Array  # i32 — busy slots at decode time
+
+
+# TokenFn: (model, EngineState) -> (next_tokens (S,) i32, model')
+TokenFn = Callable
+# AdmitFn: (model, EngineState, rows (S,) i32, mask (S,) bool,
+#           slots (S,) i32) -> model'   — in-graph prefill hook
+AdmitFn = Optional[Callable]
+
+
+def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
+                      prompt_cap: int, *, free_units=0,
+                      slot_table: int = 64) -> EngineState:
+    """Fresh device state (empty backlog, idle slots).  The scheduler
+    refreshes backlog/slot rows from its host queues at each launch; the
+    QoS state is the one source of truth shared with the host path."""
+    assert backlog_cap >= n_slots, "backlog capacity must cover the slots"
+    S, B, P = n_slots, backlog_cap, prompt_cap
+    zb = jnp.zeros((B,), jnp.int32)
+    return EngineState(
+        qos=qos,
+        slot_sema=make_sema(count=n_slots, table_size=slot_table),
+        free=jnp.asarray(free_units, jnp.int32),
+        round_no=jnp.zeros((), jnp.int32),
+        backlog=Backlog(
+            valid=jnp.zeros((B,), bool), tenant=zb,
+            ticket=jnp.zeros((B,), jnp.uint32),
+            deadline=jnp.full((B,), jnp.inf, jnp.float32),
+            rid=jnp.full((B,), -1, jnp.int32), max_new=zb,
+            prompt=jnp.zeros((B, P), jnp.int32), prompt_len=zb,
+            admit_round=jnp.full((B,), -1, jnp.int32),
+            expire_round=jnp.full((B,), -1, jnp.int32),
+            slot=jnp.full((B,), -1, jnp.int32)),
+        slots=Slots(
+            busy=jnp.zeros((S,), bool),
+            row=jnp.full((S,), -1, jnp.int32),
+            rid=jnp.full((S,), -1, jnp.int32),
+            tenant=jnp.zeros((S,), jnp.int32),
+            deadline=jnp.full((S,), jnp.inf, jnp.float32),
+            max_new=jnp.zeros((S,), jnp.int32),
+            emitted=jnp.zeros((S,), jnp.int32),
+            token=jnp.zeros((S,), jnp.int32),
+            pos=jnp.zeros((S,), jnp.int32)),
+    )
+
+
+def _assign_slots(state: EngineState, admitted: jax.Array):
+    """Map admitted backlog rows to free slots: rows in wrap-safe per-tenant
+    FCFS admission order (signed ticket distance from the post-round grant
+    frontier, tenant index tiebreak — the in-graph `_fcfs_sort`) take
+    ascending free slot indices, gated through the free-slot TWA semaphore
+    (admissions `take`; the QoS invariant guarantees n_admitted ≤ free)."""
+    sl, bl = state.slots, state.backlog
+    S = sl.busy.shape[0]
+    B = bl.valid.shape[0]
+
+    d = _sdist(bl.ticket, state.qos.grant[bl.tenant])
+    key = jnp.where(
+        admitted,
+        (jnp.clip(d, -_D_CLAMP, _D_CLAMP) << _T_BITS) + bl.tenant,
+        jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)        # admitted rows first, FCFS
+    n_adm = jnp.sum(admitted.astype(jnp.int32))
+
+    j = jnp.arange(S, dtype=jnp.int32)
+    rows = order[:S]                              # j-th admitted row (B ≥ S)
+    assign = j < n_adm
+    free_order = jnp.argsort(sl.busy, stable=True)  # free slots ascending
+    tgt = jnp.where(assign, free_order[:S], S)      # S = out-of-range → drop
+
+    slot_sema, _, _, _ = take_batch(state.slot_sema, assign)
+    seed_tok = bl.prompt[rows, jnp.maximum(bl.prompt_len[rows] - 1, 0)]
+    slots = Slots(
+        busy=sl.busy.at[tgt].set(True, mode="drop"),
+        row=sl.row.at[tgt].set(rows, mode="drop"),
+        rid=sl.rid.at[tgt].set(bl.rid[rows], mode="drop"),
+        tenant=sl.tenant.at[tgt].set(bl.tenant[rows], mode="drop"),
+        deadline=sl.deadline.at[tgt].set(bl.deadline[rows], mode="drop"),
+        max_new=sl.max_new.at[tgt].set(bl.max_new[rows], mode="drop"),
+        emitted=sl.emitted.at[tgt].set(0, mode="drop"),
+        token=sl.token.at[tgt].set(seed_tok, mode="drop"),
+        pos=sl.pos.at[tgt].set(bl.prompt_len[rows], mode="drop"))
+    bslot = bl.slot.at[jnp.where(assign, rows, B)].set(tgt, mode="drop")
+    return state._replace(slots=slots, slot_sema=slot_sema,
+                          backlog=bl._replace(slot=bslot)), rows, assign, tgt
+
+
+def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
+                 admit_fn: AdmitFn = None, admit_impl=None):
+    """One fused engine iteration — the pure-functional `step()`.
+
+    ``admit_impl`` overrides the admission-round implementation (signature
+    of `functional_qos.qos_round`); the default is the functional path, and
+    the scheduler substitutes `kernels.qos_admission.qos_round_fused` on
+    TPU (bit-identical — tests/test_qos_kernel.py).
+    """
+    sl, bl = state.slots, state.backlog
+    S = sl.busy.shape[0]
+    now = jnp.asarray(now, jnp.float32)
+
+    # (1) deadline-aware decode preemption: expired RUNNING sequences are
+    # tombstoned and their slots posted back into THIS round's pool.
+    pre = sl.busy & (sl.deadline <= now)
+    n_pre = jnp.sum(pre.astype(jnp.int32))
+    prerow = jnp.where(pre, sl.row, -1)
+    sl = sl._replace(busy=sl.busy & ~pre,
+                     row=jnp.where(pre, -1, sl.row))
+    state = state._replace(slots=sl, slot_sema=post_batch(state.slot_sema, n_pre))
+
+    # (2) the QoS admission round, preemption-freed units feeding replenish.
+    # The round only runs when live rows exist — the host path's early
+    # return on an empty backlog (an unconditional round would still poke
+    # the dead-slack window and drift bucket_seq off the host oracle).
+    alive = bl.valid
+
+    def _round(args):
+        qos, free = args
+        return qos_scan_round(qos, bl.tenant, bl.ticket, alive, bl.deadline,
+                              now, free, n_pre, max_units=S,
+                              round_impl=admit_impl)
+
+    def _skip(args):
+        qos, free = args
+        no = jnp.zeros(alive.shape, bool)
+        return qos, no, no, free + n_pre
+
+    qos, admitted, expired, leftover = jax.lax.cond(
+        jnp.any(alive), _round, _skip, (state.qos, state.free))
+    rno = state.round_no
+    bl = bl._replace(
+        valid=alive & ~admitted & ~expired,
+        admit_round=jnp.where(admitted, rno, bl.admit_round),
+        expire_round=jnp.where(expired, rno, bl.expire_round))
+    state = state._replace(qos=qos, backlog=bl)
+
+    # (3) slot assignment (FCFS → ascending free slots)
+    state, rows, assign, tgt = _assign_slots(state, admitted)
+    if admit_fn is not None:  # in-graph prefill for newly admitted slots
+        model = admit_fn(model, state, rows, assign, tgt)
+
+    # (4) decode + sample every busy slot (including this round's admits —
+    # the host engine prefills then decodes admitted rows the same step)
+    sl = state.slots
+    emit = sl.busy
+    toks, model = token_fn(model, state)
+    toks = jnp.where(emit, jnp.asarray(toks, jnp.int32), sl.token)
+    sl = sl._replace(token=toks,
+                     emitted=sl.emitted + emit.astype(jnp.int32),
+                     pos=sl.pos + emit.astype(jnp.int32))
+
+    # (5) completion: done slots post back; their units bank for the NEXT
+    # round (the host engine's `_qos_free` in kernel mode)
+    fin = sl.busy & (sl.emitted >= sl.max_new)
+    n_fin = jnp.sum(fin.astype(jnp.int32))
+    finrow = sl.row
+    sl = sl._replace(busy=sl.busy & ~fin, row=jnp.where(fin, -1, sl.row))
+    state = state._replace(
+        slots=sl, slot_sema=post_batch(state.slot_sema, n_fin),
+        free=leftover + n_fin, round_no=rno + 1)
+    ys = RoundOut(tokens=toks, emit=emit, fin=fin, pre=pre, row=finrow,
+                  prerow=prerow,
+                  n_live=jnp.sum(alive.astype(jnp.int32)),
+                  n_active=jnp.sum(emit.astype(jnp.int32)))
+    return state, model, ys
+
+
+def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
+                  admit_fn: AdmitFn = None, admit_impl=None):
+    """K fused engine rounds as one `lax.scan` — K host round-trips become
+    one launch + one drain.  ``nows``: (K,) f32 epoch-relative timestamps
+    (the host projects them at launch; in-graph time never advances on its
+    own).  Returns ``(state', model', RoundOut-of-(K, S) arrays)``."""
+
+    def body(carry, now):
+        st, m = carry
+        st, m, ys = engine_round(st, m, now, token_fn=token_fn,
+                                 admit_fn=admit_fn, admit_impl=admit_impl)
+        return (st, m), ys
+
+    (state, model), ys = jax.lax.scan(body, (state, model), nows)
+    return state, model, ys
+
+
+@functools.partial(jax.jit, static_argnames=("token_fn", "admit_fn",
+                                             "admit_impl"),
+                   donate_argnums=(0, 1))
+def megastep_jit(state: EngineState, model, nows, *, token_fn: TokenFn,
+                 admit_fn: AdmitFn = None, admit_impl=None):
+    """Donated-jit entry: the EngineState and model pytrees are donated, so
+    steady-state serving re-uses their device buffers across megasteps
+    instead of reallocating per launch."""
+    return megastep_scan(state, model, nows, token_fn=token_fn,
+                         admit_fn=admit_fn, admit_impl=admit_impl)
+
+
+def fused_round_impl(state, tenant_ids, tickets, alive, deadlines, now,
+                     free_units, max_units):
+    """Admission-round impl routing through the fused Pallas pass
+    (`kernels.qos_admission.qos_round_fused`) — bit-identical to the
+    functional default; the scheduler selects it on TPU backends where
+    the kernel compiles natively inside the scan."""
+    from ..kernels.qos_admission import qos_round_fused
+
+    return qos_round_fused(state, tenant_ids, tickets, alive, deadlines,
+                           now, free_units, max_units=max_units,
+                           interpret=jax.default_backend() != "tpu")
+
+
+# --------------------------------------------------------------- models ----
+
+
+def rid_token_fn(model, state: EngineState):
+    """Deterministic request-identity token stream (oracle/testing): token
+    = rid·1000 + #already-emitted — slot-assignment invariant, so the host
+    loop and the megastep must produce byte-equal streams."""
+    return state.slots.rid * 1000 + state.slots.emitted, model
+
+
+def zero_token_fn(model, state: EngineState):
+    """The serving-bench toy model (host path: zero logits, zero sample)."""
+    return jnp.zeros_like(state.slots.token), model
+
+
+def make_paged_attn_model(key, vocab: int, d: int, n_slots: int,
+                          capacity: int):
+    """Single-layer attention LM over a per-slot ring KV cache — the
+    demonstration that real paged decode attention + sampling runs inside
+    the scanned round (the `kernels/decode_attention` access pattern;
+    ref-path attention keeps the scan CPU-lowerable)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "emb": jax.random.normal(k1, (vocab, d), jnp.float32) * 0.05,
+        "wo": jax.random.normal(k2, (d, d), jnp.float32) * 0.05,
+        "k": jnp.zeros((n_slots, capacity, 1, d), jnp.float32),
+        "v": jnp.zeros((n_slots, capacity, 1, d), jnp.float32),
+        "pos": jnp.full((n_slots, capacity), -1, jnp.int32),
+    }
+
+
+def paged_attn_admit_fn(model, state: EngineState, rows, mask, slots):
+    """In-graph prefill: write the admitted rows' prompt embeddings into
+    their slots' KV rows (bulk masked write — one scatter per round for
+    ALL admitted slots, the batched counterpart of the host engine's
+    per-request `prefill_fn`)."""
+    bl = state.backlog
+    C = model["pos"].shape[1]
+    P = bl.prompt.shape[1]
+    S = slots.shape[0]
+    ptoks = bl.prompt[rows]                       # (S, P)
+    plens = bl.prompt_len[rows]                   # (S,)
+    pe = model["emb"][ptoks][:, :, None, :]       # (S, P, 1, d)
+    pad = ((0, 0), (0, C - P), (0, 0), (0, 0))
+    kc = jnp.pad(pe, pad)
+    vc = jnp.pad(pe, pad)                         # tied K/V embeddings
+    posc = jnp.where(jnp.arange(C)[None, :] < plens[:, None],
+                     jnp.arange(C, dtype=jnp.int32)[None, :], -1)
+    tgt = jnp.where(mask, slots, S)               # out-of-range → dropped
+    return {
+        **model,
+        "k": model["k"].at[tgt].set(kc, mode="drop"),
+        "v": model["v"].at[tgt].set(vc, mode="drop"),
+        "pos": model["pos"].at[tgt].set(posc, mode="drop"),
+    }
+
+
+def paged_attn_token_fn(model, state: EngineState):
+    """Paged single-token decode: write the current token's KV at the ring
+    cursor, attend over the slot's cache (ref-path decode attention), and
+    greedy-sample the next token."""
+    from ..kernels.ref import decode_attention_ref
+
+    sl = state.slots
+    S, C = model["pos"].shape
+    cur = model["emb"][sl.token]                  # (S, d)
+    ring = sl.pos % C                             # per-slot write cursor
+    rows_i = jnp.arange(S, dtype=jnp.int32)
+    wr = sl.busy
+    k = model["k"].at[rows_i, ring, 0].set(
+        jnp.where(wr[:, None], cur, model["k"][rows_i, ring, 0]))
+    v = model["v"].at[rows_i, ring, 0].set(
+        jnp.where(wr[:, None], cur, model["v"][rows_i, ring, 0]))
+    pos = model["pos"].at[rows_i, ring].set(
+        jnp.where(wr, sl.pos, model["pos"][rows_i, ring]))
+    o = decode_attention_ref(cur[:, None, :], k, v, pos, sl.pos)  # (S,1,d)
+    logits = (o[:, 0] @ model["wo"]) @ model["emb"].T
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return toks, {**model, "k": k, "v": v, "pos": pos}

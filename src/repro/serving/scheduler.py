@@ -32,6 +32,14 @@ under saturation.  With ``use_kernel=True`` the whole tenant round
 (`kernels.qos_admission`, interpret-mode off-TPU) instead of the host
 queue walk — same admission semantics, one vectorized in-graph sweep.
 
+Device-resident megastep (``megastep(K)``): the whole engine loop — deadline
+preemption, the QoS admission round, TWA slot assignment, decode+sample,
+completion — runs as ONE jitted `lax.scan` over a donated on-device
+`serving.engine_state.EngineState` pytree, draining K decoded tokens per
+host sync instead of one.  Round-for-round identical to K `step()` calls
+(tests/test_megastep.py); `benchmarks/serving_bench.py` measures the
+speedup vs K.
+
 The engine below is deliberately model-agnostic: `step_fn` is any callable
 (tokens, positions, caches) → (logits, caches); tests drive it with a tiny
 transformer, examples/serve_continuous_batching.py with a reduced config.
@@ -56,7 +64,14 @@ from ..admission.functional_qos import (
     qos_replenish,
     qos_take,
 )
-from ..core.functional import SemaState, make_sema, post_batch, take_batch, woken_mask
+from ..core.functional import (
+    SemaState,
+    make_sema,
+    next_pow2 as _next_pow2,
+    post_batch,
+    take_batch,
+    woken_mask,
+)
 from ..core.twa_semaphore import TWASemaphore
 
 
@@ -73,22 +88,27 @@ class Request:
     fast: bool = False  # admitted at take time (paper's fast-path return)
     slot: Optional[int] = None
     expired: bool = False  # deadline passed before admission (tombstoned)
+    preempted: bool = False  # deadline passed mid-decode (slot reclaimed)
     out_tokens: list[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     enqueue_t: float = 0.0
     admit_t: float = 0.0
     finish_t: float = 0.0
+    admit_round: int = -1  # global engine round of admission
+    expire_round: int = -1  # global engine round of expiry/preemption
 
 
 @dataclass
 class EngineStats:
     admitted: int = 0
     finished: int = 0
-    expired: int = 0  # deadline-missed before admission (tombstoned tickets)
+    expired: int = 0  # deadline-missed (tombstoned tickets + preemptions)
+    preempted: int = 0  # deadline-missed mid-decode (slot reclaimed)
     steps: int = 0
     backlog_scans: int = 0  # requests re-examined by the scheduler loop
     backlog_skipped: int = 0  # requests NOT re-examined thanks to TWA buckets
     wakeups: int = 0
+    host_syncs: int = 0  # host↔device round-trips (1/step; 1/megastep)
 
 
 class ContinuousBatchingEngine:
@@ -103,6 +123,9 @@ class ContinuousBatchingEngine:
         table_size: int = 256,
         use_kernel: bool = False,
         tenants: Optional[dict[str, float]] = None,
+        clock: Callable[[], float] = time.monotonic,
+        backlog_cap: int = 4096,
+        prompt_cap: int = 32,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -115,6 +138,13 @@ class ContinuousBatchingEngine:
         self._lock = threading.Lock()
         self._client_sem = TWASemaphore(0, waiting="futex")  # completion wakeups
         self._use_kernel = use_kernel
+        # injectable clock: deadlines compare against THIS time source, so
+        # tests (megastep ≡ host-loop property) can drive virtual time
+        self._clock = clock
+        self._round_no = 0  # global engine round counter (step & megastep)
+        self._backlog_cap = backlog_cap  # megastep device backlog ceiling
+        self._prompt_cap = prompt_cap  # megastep padded prompt ceiling
+        self.megastep_model = None  # device model pytree (megastep mode)
         # --- multi-tenant QoS admission (admission.functional_qos) ---
         self._tenants = tenants
         if tenants is not None:
@@ -195,7 +225,7 @@ class ContinuousBatchingEngine:
                 f"unregistered tenant(s) {sorted(unknown)}; this engine "
                 f"serves tenants {list(self._tenant_names)}")
         with self._lock:
-            now = time.monotonic()
+            now = self._clock()
             ids = [self._tindex[r.tenant_id] for r in reqs]
             # Deadlines enter the graph RELATIVE to now: small deltas stay
             # exact in float32, whereas absolute monotonic stamps (~boot
@@ -244,6 +274,7 @@ class ContinuousBatchingEngine:
 
     def _expire_req(self, r: Request, tidx: int) -> None:
         r.expired = True
+        r.expire_round = self._round_no
         self.stats.expired += 1
         self.tenant_expired[self._tenant_names[tidx]] += 1
         r.finish_t = time.time()
@@ -253,7 +284,7 @@ class ContinuousBatchingEngine:
         """Tombstone backlog entries whose admission deadline passed.  The
         host-side skip: the next live same-tenant waiter is flagged for
         re-examination so the dead ticket never blocks it."""
-        now = time.monotonic()
+        now = self._clock()
         dead_bump = np.zeros(len(self._tenant_names), np.uint32)
         while self._deadline_heap and self._deadline_heap[0][0] <= now:
             _, _, r = heapq.heappop(self._deadline_heap)
@@ -286,7 +317,7 @@ class ContinuousBatchingEngine:
         rows = [r for q in self._tenant_queues for r in q if not r.expired]
         if not rows:
             return []
-        now = time.monotonic()
+        now = self._clock()
         ids = np.asarray([self._tindex[r.tenant_id] for r in rows], np.int32)
         tks = np.asarray([r.ticket for r in rows], np.uint32)
         # relative deadlines: see _submit_qos on float32 precision
@@ -424,10 +455,22 @@ class ContinuousBatchingEngine:
         return admitted
 
     def _finish(self, slot: int, reason: str):
+        """Retire a slot.  ``reason == "deadline"`` is decode preemption:
+        the sequence is tombstoned (expired mid-decode), not completed —
+        same slot-release path, different accounting."""
         req = self.active.pop(slot)
         req.finish_t = time.time()
         self.free_slots.append(slot)
-        self.stats.finished += 1
+        if reason == "deadline":
+            req.expired = True
+            req.preempted = True
+            req.expire_round = self._round_no
+            self.stats.preempted += 1
+            self.stats.expired += 1
+            if self._tenants is not None:
+                self.tenant_expired[req.tenant_id] += 1
+        else:
+            self.stats.finished += 1
         # slot freed → post: advances grant AND pokes the bucket of the next
         # waiting ticket (successor staging — the paper's SemaPost).  In QoS
         # mode the freed slot instead re-enters the weighted replenishment.
@@ -439,19 +482,35 @@ class ContinuousBatchingEngine:
         req.done_event.set()
         self._client_sem.post()
 
+    def _preempt_expired(self):
+        """Deadline-aware decode preemption (host path, both modes): a
+        RUNNING sequence whose deadline passed is tombstoned and its slot
+        freed BEFORE this step's admission, so the reclaimed unit feeds the
+        same round's replenish and the next live ticket is re-granted in
+        FCFS order (the megastep does the identical thing in-graph)."""
+        now = self._clock()
+        for slot, req in list(self.active.items()):
+            if req.deadline is not None and req.deadline <= now:
+                self._finish(slot, "deadline")
+
     def step(self, sample_fn: Callable[[np.ndarray], np.ndarray]) -> int:
-        """One engine iteration: admit → prefill admitted → decode active.
-        Returns number of active rows."""
+        """One engine iteration: preempt expired → admit → prefill admitted
+        → decode active.  Returns number of active rows."""
         with self._lock:
+            rnd = self._round_no
+            self.stats.host_syncs += 1
+            self._preempt_expired()
             for req in self._admit_ready():
                 slot = self.free_slots.pop()
                 req.slot = slot
                 req.admit_t = time.time()
+                req.admit_round = rnd
                 self.active[slot] = req
                 self.stats.admitted += 1
                 self.prefill_fn(req)  # engine-owner fills the row's cache
 
             if not self.active:
+                self._round_no = rnd + 1
                 return 0
             self.stats.steps += 1
             logits = self.step_fn(list(self.active.values()))
@@ -463,7 +522,238 @@ class ContinuousBatchingEngine:
                     done_slots.append(slot)
             for slot in done_slots:
                 self._finish(slot, "length")
+            self._round_no = rnd + 1
             return len(self.active)
+
+    # ----------------------------------------------------------- megastep ---
+
+    def megastep(self, K: int, *, token_fn=None, admit_fn=None,
+                 nows=None) -> int:
+        """Device-resident decode megastep: K fused engine rounds as ONE
+        jitted `lax.scan` (`serving.engine_state.megastep_jit`) over a
+        donated on-device :class:`~repro.serving.engine_state.EngineState`
+        — the host syncs once per K decoded tokens (launch + one drain of
+        the (K, S) token/event buffers) instead of once per token.
+
+        Each scanned round fuses: deadline preemption of running slots →
+        the QoS admission round (preemption-freed units feed the SAME
+        round's replenish) → FCFS slot assignment through the free-slot
+        TWA semaphore → ``token_fn`` decode+sample → completion
+        retirement.  Round-for-round identical to K sequential `step()`
+        calls (property-tested in tests/test_megastep.py).
+
+        ``token_fn(model, EngineState) -> (tokens (S,) i32, model')`` and
+        the optional in-graph prefill hook ``admit_fn(model, state, rows,
+        mask, slots) -> model'`` must be jittable; the model pytree lives
+        in ``self.megastep_model`` and is donated across launches.
+        ``nows``: optional (K,) float timestamps RELATIVE to launch
+        (default: all 0.0 — time frozen at launch for the whole
+        megastep).  Returns the number of busy slots after the last
+        round.
+        """
+        from .engine_state import (
+            Slots,
+            fused_round_impl,
+            make_engine_state,
+            megastep_jit,
+            zero_token_fn,
+        )
+
+        if self._tenants is None:
+            raise ValueError("megastep requires QoS mode (tenants=...)")
+        if K < 1:
+            raise ValueError("megastep needs K >= 1")
+        token_fn = token_fn or zero_token_fn
+        with self._lock:
+            self.stats.host_syncs += 1
+            base = self._round_no
+            t0 = self._clock()
+            S = self.n_slots
+
+            # Round-robin drain of the tenant queues up to the device
+            # backlog capacity: truncation at the cap only ever cuts
+            # per-tenant queue TAILS, so FCFS within a tenant is preserved
+            # (dropped rows simply wait for a later megastep).
+            qs = [[r for r in q if not r.expired]
+                  for q in self._tenant_queues]
+            heads = [0] * len(qs)
+            rows: list[Request] = []
+            while len(rows) < self._backlog_cap:
+                moved = False
+                for qi, q in enumerate(qs):
+                    if heads[qi] < len(q) and len(rows) < self._backlog_cap:
+                        rows.append(q[heads[qi]])
+                        heads[qi] += 1
+                        moved = True
+                if not moved:
+                    break
+            n = len(rows)
+            # power-of-two shape buckets: steady-state serving re-uses one
+            # compiled executable per (B, P, K) bucket instead of
+            # retracing per backlog length (cf. kernels.ops._pad_backlog)
+            B = max(_next_pow2(max(n, S)), 8)
+            maxp = max([len(r.prompt) for r in rows]
+                       + [len(r.prompt) for r in self.active.values()] + [1])
+            P = min(_next_pow2(maxp), self._prompt_cap)
+
+            state = make_engine_state(self.qos, S, B, P,
+                                      free_units=self._qos_free)
+            valid = np.zeros(B, bool)
+            ids = np.zeros(B, np.int32)
+            tks = np.zeros(B, np.uint32)
+            dls = np.full(B, np.inf, np.float32)
+            rid = np.full(B, -1, np.int32)
+            mx = np.zeros(B, np.int32)
+            pl = np.zeros(B, np.int32)
+            pr = np.zeros((B, P), np.int32)
+            for i, r in enumerate(rows):
+                valid[i] = True
+                ids[i] = self._tindex[r.tenant_id]
+                tks[i] = r.ticket
+                if r.deadline is not None:
+                    dls[i] = r.deadline - t0
+                rid[i] = r.rid
+                mx[i] = r.max_new_tokens
+                p = r.prompt[-P:] if r.prompt else [0]
+                pl[i] = len(p)
+                pr[i, :len(p)] = p
+            sb = np.zeros(S, bool)
+            srow = np.full(S, -1, np.int32)
+            srid = np.full(S, -1, np.int32)
+            sten = np.zeros(S, np.int32)
+            sdl = np.full(S, np.inf, np.float32)
+            smx = np.zeros(S, np.int32)
+            sem = np.zeros(S, np.int32)
+            stok = np.zeros(S, np.int32)
+            spos = np.zeros(S, np.int32)
+            for slot, r in self.active.items():
+                sb[slot] = True
+                srow[slot] = B + slot  # host-resolved: active at launch
+                srid[slot] = r.rid
+                sten[slot] = self._tindex[r.tenant_id]
+                if r.deadline is not None:
+                    sdl[slot] = r.deadline - t0
+                smx[slot] = r.max_new_tokens
+                sem[slot] = len(r.out_tokens)
+                stok[slot] = (r.out_tokens[-1] if r.out_tokens
+                              else (r.prompt[-1] if r.prompt else 0))
+                spos[slot] = len(r.prompt) + len(r.out_tokens)
+            state = state._replace(
+                round_no=jnp.asarray(base, jnp.int32),
+                backlog=state.backlog._replace(
+                    valid=jnp.asarray(valid), tenant=jnp.asarray(ids),
+                    ticket=jnp.asarray(tks), deadline=jnp.asarray(dls),
+                    rid=jnp.asarray(rid), max_new=jnp.asarray(mx),
+                    prompt=jnp.asarray(pr), prompt_len=jnp.asarray(pl)),
+                slots=Slots(
+                    busy=jnp.asarray(sb), row=jnp.asarray(srow),
+                    rid=jnp.asarray(srid), tenant=jnp.asarray(sten),
+                    deadline=jnp.asarray(sdl), max_new=jnp.asarray(smx),
+                    emitted=jnp.asarray(sem), token=jnp.asarray(stok),
+                    pos=jnp.asarray(spos)),
+                slot_sema=state.slot_sema._replace(
+                    ticket=jnp.uint32(int(sb.sum()))))
+
+            if nows is None:
+                nows_a = np.zeros(K, np.float32)
+            else:
+                nows_a = np.asarray(nows, np.float32)
+                if nows_a.shape != (K,):
+                    raise ValueError(f"nows must be shape ({K},)")
+            admit_impl = (fused_round_impl
+                          if self._use_kernel
+                          and jax.default_backend() == "tpu" else None)
+
+            # donation requires every leaf to own a distinct buffer: the
+            # freshly-built state is small (copy unconditionally — fresh
+            # QoS states alias one zeros buffer across fields); the model
+            # (KV caches — the big pytree) is copied only on first
+            # adoption, then flows donated launch-to-launch.
+            state = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), state)
+            model = self.megastep_model if self.megastep_model is not None \
+                else ()
+            if model is not getattr(self, "_megastep_model_last", None):
+                model = jax.tree_util.tree_map(
+                    lambda x: jnp.array(x, copy=True), model)
+            st, model, ys = megastep_jit(
+                state, model, jnp.asarray(nows_a), token_fn=token_fn,
+                admit_fn=admit_fn, admit_impl=admit_impl)
+            self.megastep_model = model
+            self._megastep_model_last = model
+
+            # ---- the ONE host sync: drain state + event buffers --------
+            st_h, ys_h = jax.device_get((st, ys))
+            prev_active = dict(self.active)
+
+            def req_of(row: int) -> Request:
+                return rows[row] if row < B else prev_active[row - B]
+
+            gone = set()
+            for i, r in enumerate(rows):
+                tidx = self._tindex[r.tenant_id]
+                if st_h.backlog.admit_round[i] >= 0:
+                    r.admit_round = int(st_h.backlog.admit_round[i])
+                    r.admit_t = time.time()
+                    r.slot = int(st_h.backlog.slot[i])
+                    self.stats.admitted += 1
+                    self.tenant_admitted[r.tenant_id] += 1
+                    self._tenant_live[tidx] -= 1
+                    gone.add(id(r))
+                elif st_h.backlog.expire_round[i] >= 0:
+                    self._expire_req(r, tidx)
+                    r.expire_round = int(st_h.backlog.expire_round[i])
+                    self._tenant_live[tidx] -= 1
+                    gone.add(id(r))
+            if gone:
+                for tidx, q in enumerate(self._tenant_queues):
+                    self._tenant_queues[tidx] = deque(
+                        r for r in q if id(r) not in gone)
+
+            for k in range(K):
+                for s in np.flatnonzero(ys_h.pre[k]):
+                    r = req_of(int(ys_h.prerow[k][s]))
+                    r.expired = True
+                    r.preempted = True
+                    r.expire_round = base + k
+                    r.finish_t = time.time()
+                    self.stats.preempted += 1
+                    self.stats.expired += 1
+                    self.tenant_expired[r.tenant_id] += 1
+                    self.stats.wakeups += 1
+                    r.done_event.set()
+                    self._client_sem.post()
+                for s in np.flatnonzero(ys_h.emit[k]):
+                    req_of(int(ys_h.row[k][s])).out_tokens.append(
+                        int(ys_h.tokens[k][s]))
+                for s in np.flatnonzero(ys_h.fin[k]):
+                    r = req_of(int(ys_h.row[k][s]))
+                    r.finish_t = time.time()
+                    self.stats.finished += 1
+                    self.stats.wakeups += 1
+                    r.done_event.set()
+                    self._client_sem.post()
+            self.stats.steps += int((ys_h.n_active > 0).sum())
+            self.stats.backlog_scans += int(ys_h.n_live.sum())
+
+            # drop resolved entries from the host expiry heap (only the
+            # non-kernel step() path pops it — a megastep-only engine
+            # would otherwise retain every deadline Request forever)
+            if self._deadline_heap:
+                self._deadline_heap = [
+                    e for e in self._deadline_heap
+                    if not (e[2].expired or e[2].slot is not None
+                            or e[2].done_event.is_set())]
+                heapq.heapify(self._deadline_heap)
+
+            self.active = {int(s): req_of(int(st_h.slots.row[s]))
+                           for s in np.flatnonzero(st_h.slots.busy)}
+            self.free_slots = [s for s in range(S)
+                               if not st_h.slots.busy[s]]
+            self._qos_free = int(st_h.free)
+            self.qos = st.qos  # keep the (fresh) device arrays
+            self._round_no = base + K
+            return int(st_h.slots.busy.sum())
 
     # ---------------------------------------------------------- telemetry ---
 
@@ -478,6 +768,9 @@ class ContinuousBatchingEngine:
         if self._tenants is not None:
             total = sum(self.tenant_admitted.values())
             tel["backlog"] = int(self._tenant_live.sum())
+            # the global `self.sema` is unused in QoS mode — queue depth is
+            # the live per-tenant backlog, not the (frozen) ticket − grant
+            tel["queue_depth"] = int(self._tenant_live.sum())
             tel["tenants"] = {
                 t: {"weight": self._tenants[t],
                     "admitted": self.tenant_admitted[t],
