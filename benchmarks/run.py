@@ -27,7 +27,14 @@ def main(argv=None):
     ap.add_argument("--only", default="figure1,serving,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-section metrics JSON to PATH")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: skip the K=128 megastep sweep and "
+                         "shrink the paged-pool workload (flat wall time)")
     args = ap.parse_args(argv)
+    if args.quick:
+        import os
+
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     if args.json:  # fail fast, not after minutes of benchmarking
         with open(args.json, "a"):
             pass

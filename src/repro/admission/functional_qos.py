@@ -282,6 +282,38 @@ def qos_reclaim(state: QoSState, live_depth: jax.Array):
             jnp.sum(surplus).astype(jnp.int32))
 
 
+# -- multi-resource gate (slots × KV blocks) -----------------------------------
+
+
+def block_gate(admitted: jax.Array, demand: jax.Array, key: jax.Array,
+               free_blocks):
+    """Second-resource admission gate: of the rows the QoS round admitted
+    (each holding one SLOT unit), keep the longest FCFS prefix whose
+    cumulative worst-case **block** demand fits the free pool — the
+    batched form of taking ``demand_i`` units from the TWA block semaphore
+    in ticket order.  Strict FCFS: a row that does not fit blocks every
+    later row (no bypass — a stream of small sequences can never starve a
+    large one, exactly the paper's first-come-first-enabled order).
+
+    ``key`` is the global admission order (the engine's packed
+    (clamped ticket distance, tenant index) sort key — see
+    `serving.engine_state._fcfs_key`); non-admitted rows must carry the
+    sentinel INT32_MAX.  Returns the granted mask; the caller refunds the
+    QoS slot credit of ``admitted & ~granted`` rows (they stay live in the
+    backlog and retry next round — "block-stalled").
+    """
+    n = admitted.shape[0]
+    demand = jnp.asarray(demand, jnp.int32)
+    order = jnp.argsort(jnp.where(admitted, key, jnp.iinfo(jnp.int32).max),
+                        stable=True)
+    adm_s = admitted[order]
+    cum = jnp.cumsum(jnp.where(adm_s, demand[order], 0))
+    fits = cum <= jnp.asarray(free_blocks, jnp.int32)
+    blocked = jnp.cumsum((adm_s & ~fits).astype(jnp.int32)) > 0
+    ok = adm_s & fits & ~blocked
+    return jnp.zeros((n,), bool).at[order].set(ok)
+
+
 # -- one fused admission round -------------------------------------------------
 
 

@@ -118,6 +118,97 @@ def poll(state: SemaState, tickets: jax.Array) -> jax.Array:
     return _sdist(state.grant, tickets) > 0
 
 
+# -- block-paged pool (TWA semaphore over a circular free queue) --------------
+
+
+class BlockPool(NamedTuple):
+    """Demand-paged block allocator gated by a TWA semaphore — the paper's
+    counting semaphore where the *units are KV-cache blocks* and the
+    semaphore counters double as the cursors of a circular free queue:
+
+      * ``sema.ticket`` / ``sema.grant`` are the paper's counters; the
+        physical free-block count is the counter identity
+        ``grant − ticket`` (wrap-safe signed distance);
+      * the free queue holds block *identities*: queue position ``p``
+        (a u32 cursor value) stores its id at ``free_q[p mod NB]`` — an
+        allocation at ticket ``t`` takes ids ``free_q[t..t+k)``, a release
+        writes ids at ``free_q[grant..grant+k)`` and `post`s, poking the
+        waiting-array buckets of the enabled ticket range exactly as any
+        other post (a block release wakes block waiters).
+
+    ``num_blocks`` must be a power of two so the queue-position arithmetic
+    stays exact across the 2³² counter wrap (``(p mod 2³²) mod NB ==
+    p mod NB`` iff NB | 2³² — same reasoning as the bucket table mask).
+
+    Conservation invariant (property-tested): the multiset
+    ``{free_q[ticket..grant)} ∪ {live block-table entries}`` is exactly
+    ``{0..NB-1}`` at every round — no block is ever lost or aliased into
+    two live tables.
+    """
+
+    sema: SemaState    # ticket/grant u32 — free blocks = grant − ticket
+    free_q: jax.Array  # (NB,) i32 — circular queue of free block ids
+
+
+def make_block_pool(num_blocks: int, table_size: int = 64,
+                    salt: int = 0x9E3779B9, start: int = 0) -> BlockPool:
+    """Fresh pool: all blocks free.  ``start`` offsets both counters (and
+    rotates the queue to match) so tests can park the cursors just below
+    the 2³² wrap."""
+    assert num_blocks > 0 and (num_blocks & (num_blocks - 1)) == 0, \
+        "num_blocks must be a power of two (wrap-safe queue positions)"
+    sema = make_sema(count=num_blocks, table_size=table_size, salt=salt)
+    start = jnp.uint32(start)
+    sema = sema._replace(ticket=sema.ticket + start, grant=sema.grant + start)
+    ids = jnp.arange(num_blocks, dtype=jnp.int32)
+    pos = ((start + jnp.arange(num_blocks, dtype=jnp.uint32))
+           & jnp.uint32(num_blocks - 1)).astype(jnp.int32)
+    return BlockPool(sema=sema,
+                     free_q=jnp.zeros((num_blocks,), jnp.int32).at[pos].set(ids))
+
+
+def pool_free_count(pool: BlockPool) -> jax.Array:
+    """Free blocks — the paper's counter identity, i32 scalar."""
+    return _sdist(pool.sema.grant, pool.sema.ticket)
+
+
+def pool_alloc(pool: BlockPool, counts: jax.Array, max_per: int):
+    """Batched wrap-safe take: consumer ``s`` receives ``counts[s]`` block
+    ids (its row of the returned ``(S, max_per)`` table, -1 padded), taken
+    from the free queue in cursor order — consumers are linearized by row
+    index, the batched FCFS of `take_batch`.  The caller must guarantee
+    ``sum(counts) ≤ pool_free_count`` (the engine's admission gate does).
+    Returns ``(pool', ids)``."""
+    counts = jnp.asarray(counts, jnp.int32)
+    NB = pool.free_q.shape[0]
+    cum = jnp.cumsum(counts) - counts            # exclusive prefix offsets
+    k = jnp.arange(max_per, dtype=jnp.int32)
+    take = k[None, :] < counts[:, None]          # (S, max_per)
+    pos = (pool.sema.ticket + cum[:, None].astype(jnp.uint32)
+           + k[None, :].astype(jnp.uint32)) & jnp.uint32(NB - 1)
+    ids = jnp.where(take, pool.free_q[pos.astype(jnp.int32)], -1)
+    total = jnp.sum(counts).astype(jnp.uint32)
+    sema = pool.sema._replace(ticket=pool.sema.ticket + total)
+    return pool._replace(sema=sema), ids
+
+
+def pool_release(pool: BlockPool, ids: jax.Array, mask: jax.Array) -> BlockPool:
+    """Batched post: every non-negative id in the rows selected by ``mask``
+    re-enters the free queue at the grant cursor (row-major order), then
+    the semaphore `post`s the total — advancing grant AND poking the
+    TWAHash buckets of the newly enabled ticket range, so block waiters
+    are staged for re-examination exactly like slot waiters."""
+    NB = pool.free_q.shape[0]
+    valid = (mask[:, None] & (ids >= 0)).reshape(-1)
+    flat = ids.reshape(-1)
+    vu = valid.astype(jnp.uint32)
+    rank = jnp.cumsum(vu) - vu
+    pos = ((pool.sema.grant + rank) & jnp.uint32(NB - 1)).astype(jnp.int32)
+    tgt = jnp.where(valid, pos, NB)              # out-of-range → dropped
+    free_q = pool.free_q.at[tgt].set(flat, mode="drop")
+    return BlockPool(sema=post_batch(pool.sema, jnp.sum(vu)), free_q=free_q)
+
+
 # -- vectorized multi-semaphore (one per expert / per resource class) ---------
 
 

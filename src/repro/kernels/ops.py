@@ -16,6 +16,7 @@ import numpy as np
 from ..core.functional import next_pow2 as _next_pow2
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention_fwd as _flash_attention_fwd
+from .paged_decode import paged_decode as _paged_decode
 from .qos_admission import qos_round_fused as _qos_round_fused
 from .qos_admission import qos_round_scan as _qos_round_scan
 from .sema_batch import sema_batch as _sema_batch
@@ -37,6 +38,13 @@ def decode_attention(q, k, v, kv_pos, q_pos, *, window=0, block_k=512):
         q, k, v, kv_pos, q_pos, window=window, block_k=block_k,
         interpret=_interpret(),
     )
+
+
+def paged_decode(q, k_pool, v_pool, block_tbl, lens):
+    """Ragged flash-decode over the block-paged KV pool (oracle:
+    `ref.paged_decode_ref`, bit-exact in interpret mode)."""
+    return _paged_decode(q, k_pool, v_pool, block_tbl, lens,
+                         interpret=_interpret())
 
 
 def sema_batch(ticket, grant, bucket_seq, requests, post_n, salt, *, block_n=512):

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: ragged flash-decode over a block-paged KV pool.
+
+The dense decode kernel (`kernels/decode_attention`) streams each slot's
+whole ring cache — (S, C) tokens of HBM traffic per step regardless of how
+many tokens the slot actually holds, so short sequences pay long-sequence
+cost and the cache must be reserved up front.  This kernel decodes against
+the **shared block pool** managed by the TWA block semaphore
+(`core.functional.BlockPool` / `serving.engine_state`): each slot owns a
+small table of block ids, and the kernel streams exactly the blocks the
+slot has written — attention bytes ∝ live tokens, not ∝ S·C.
+
+TPU adaptation notes:
+  * grid = (S, KV, MB) with the block axis innermost-sequential; the block
+    table and per-slot lengths ride in as **scalar prefetch** operands
+    (`pltpu.PrefetchScalarGridSpec`), so each K/V BlockSpec index map
+    dereferences ``tbl[s, i]`` to aim the next DMA at the right pool block
+    — the table gather never materializes a dense (S, MB·BS) cache;
+  * raggedness is data-driven: grid bound MB is the static per-slot
+    maximum, and blocks at or past a slot's length (``i·BS ≥ len``) are
+    skipped with `pl.when` — the online-softmax carry is untouched, so
+    empty tail blocks and wholly-idle slots cost no flops (their DMA is
+    aimed at the clamped block 0, a benign re-fetch);
+  * unallocated table entries (-1) are clamped to block 0 in the index map
+    — compute for them is always masked (a slot's length never reaches an
+    unallocated block by the allocator's demand invariant);
+  * the per-block math is `ref.flash_decode_block`, shared VERBATIM with
+    the blockwise oracle `ref.paged_decode_ref` — interpret-mode
+    bit-exactness therefore pins the paging logic (index maps, masks,
+    init/finalize), not fp reassociation;
+  * m/l/acc VMEM scratch carries the online softmax across the block axis,
+    identical recurrence to `decode_attention`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF, flash_decode_block
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, block_size):
+    s = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[s]
+
+    @pl.when(i * block_size < length)  # ragged bound: skip empty tail blocks
+    def _block():
+        q = q_ref[0, 0]  # (G, hd)
+        k = k_ref[0, 0]  # (BS, hd) — pool block aimed by the index map
+        v = v_ref[0, 0]
+        tpos = i * block_size + jax.lax.iota(jnp.int32, block_size)
+        mask = tpos < length
+        m, l, acc = flash_decode_block(
+            q, k, v, mask, m_ref[...], l_ref[...], acc_ref[...], scale=scale)
+        m_ref[...] = m
+        l_ref[...] = l
+        acc_ref[...] = acc
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode(q, k_pool, v_pool, block_tbl, lens, *, interpret=False):
+    """q: (S, H, hd); k_pool/v_pool: (NB, BS, KV, hd); block_tbl: (S, MB)
+    int32 (-1 ⇒ unallocated); lens: (S,) int32 valid tokens per slot.
+    Returns (S, H, hd).  Oracle: `ref.paged_decode_ref` (bit-exact in
+    interpret mode)."""
+    S, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    MB = block_tbl.shape[1]
+    assert H % KV == 0
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(S, KV, G, hd)
+    kp = k_pool.transpose(2, 0, 1, 3)  # (KV, NB, BS, hd)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    tbl = jnp.asarray(block_tbl, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    def kv_map(s, h, i, tbl_ref, len_ref):
+        # table-driven DMA: the scalar-prefetched block id aims the fetch;
+        # -1 (unallocated) clamps to pool block 0, compute stays masked
+        return (h, jnp.maximum(tbl_ref[s, i], 0), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda s, h, i, tbl, ln: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, BS, hd), kv_map),
+            pl.BlockSpec((1, 1, BS, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda s, h, i, tbl, ln: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, block_size=BS),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, qr, kp, vp)
+    return out.reshape(S, H, hd)

@@ -141,6 +141,109 @@ def mha_ref(q, k, v, *, causal=True, window=0, q_offset=0):
     return out.astype(q.dtype)
 
 
+# ---------------------------------------------------------- paged decode ----
+
+
+NEG_INF = float("-inf")
+
+
+def flash_decode_block(q, k, v, mask, m_prev, l_prev, acc_prev, *, scale):
+    """One online-softmax block step of flash-decode — shared VERBATIM by
+    the Pallas kernel (`kernels/paged_decode._paged_kernel`) and the
+    blockwise oracle below, so interpret-mode bit-exactness tests the
+    kernel's *paging* logic (table-driven DMA, ragged skip, init/finalize)
+    rather than fp reassociation noise.
+
+    q: (G, hd); k/v: (BS, hd); mask: (BS,) bool (valid tokens);
+    m/l: (G, 1) f32 carries; acc: (G, hd) f32.  Returns (m', l', acc')."""
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale  # (G, BS)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return m_new, l_new, acc_new
+
+
+def paged_decode_ref(q, k_pool, v_pool, block_tbl, lens):
+    """Blockwise oracle for the ragged paged-decode kernel
+    (`kernels/paged_decode.paged_decode` — bit-exact in interpret mode).
+
+    q: (S, H, hd); k_pool/v_pool: (NB, BS, KV, hd) — the shared block-paged
+    KV pool; block_tbl: (S, MB) int32 block ids (-1 ⇒ unallocated);
+    lens: (S,) int32 — valid tokens of each slot (tokens 0..len-1 live at
+    block ``block_tbl[s, t // BS]`` offset ``t % BS``).  Returns (S, H, hd).
+
+    The recurrence mirrors the kernel exactly (same `flash_decode_block`,
+    same -1→0 table clamp, same ``i·BS < len`` ragged skip), and rows run
+    under `lax.map` so every dot keeps the kernel's UNBATCHED (G, hd) ×
+    (BS, hd) shape — a vmapped/batched dot reduces in a different order on
+    CPU at G=1 (1-ulp drift) and would break the bit-exact contract.
+    Semantic equivalence to the naive dense softmax is checked separately
+    against `decode_attention_ref` over the gathered cache
+    (tests/test_paged_decode.py) — the fp delta between blockwise and
+    dense softmax is tiny but nonzero, so *bit*-exactness is defined
+    against this blockwise form.
+    """
+    S, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    MB = block_tbl.shape[1]
+    G = H // KV
+    R = S * KV
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(S, KV, G, hd).reshape(R, G, hd)
+    kp = k_pool.transpose(2, 0, 1, 3)  # (KV, NB, BS, hd)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    tbl_r = jnp.repeat(jnp.asarray(block_tbl, jnp.int32), KV, axis=0)
+    lens_r = jnp.repeat(jnp.asarray(lens, jnp.int32), KV)
+    head = jnp.tile(jnp.arange(KV, dtype=jnp.int32), S)  # r = s·KV + h
+
+    def row(args):
+        qrow, trow, ln, h = args
+        m = jnp.full((G, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((G, 1), jnp.float32)
+        acc = jnp.zeros((G, hd), jnp.float32)
+
+        def body(carry, i):
+            m, l, acc = carry
+            b = jnp.maximum(trow[i], 0)          # the kernel's index-map clamp
+            tpos = i * BS + jnp.arange(BS, dtype=jnp.int32)
+            m2, l2, acc2 = flash_decode_block(
+                qrow, kp[h, b], vp[h, b], tpos < ln, m, l, acc, scale=scale)
+            upd = i * BS < ln                    # the kernel's pl.when skip
+            return (jnp.where(upd, m2, m), jnp.where(upd, l2, l),
+                    jnp.where(upd, acc2, acc)), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m, l, acc),
+                                      jnp.arange(MB, dtype=jnp.int32))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    o = jax.lax.map(row, (qr, tbl_r, lens_r, head))
+    return o.reshape(S, KV, G, hd).reshape(S, H, hd)
+
+
+def paged_gather_kv(pool, block_tbl, lens):
+    """Dense view of a paged cache: gather ``(S, MB·BS, KV, hd)`` plus the
+    per-token position array (`decode_attention_ref` conventions, -1 ⇒
+    empty) — the bridge that lets the naive dense oracle cross-check the
+    blockwise one."""
+    NB, BS, KV, hd = pool.shape
+    S, MB = block_tbl.shape
+    b = jnp.maximum(jnp.asarray(block_tbl, jnp.int32), 0)
+    dense = pool[b].reshape(S, MB * BS, KV, hd)
+    t = jnp.arange(MB * BS, dtype=jnp.int32)[None, :]
+    pos = jnp.where(t < jnp.asarray(lens, jnp.int32)[:, None], t, -1)
+    return dense, pos
+
+
 # -------------------------------------------------------- decode attention ---
 
 

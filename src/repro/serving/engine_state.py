@@ -41,6 +41,39 @@ property-tested in tests/test_megastep.py):
   wrap-safe FCFS order  →  decode + sample every busy slot  →  retire
   completed slots (their units bank for the next round, exactly the
   host engine's ``_qos_free`` in kernel mode).
+
+Block-paged KV pool (the TWA **block** semaphore ↔ paper mapping)
+-----------------------------------------------------------------
+
+With ``kv=`` configured, decode KV lives in a shared pool of fixed-size
+blocks instead of per-slot rings, and the allocator is the paper's
+semaphore a second time at block granularity (`core.functional.BlockPool`):
+
+  * **units are blocks**: the semaphore's counter identity
+    ``grant − ticket`` IS the free-block count, and the counters double as
+    the cursors of the circular free queue holding block *identities* —
+    an allocation is a wrap-safe `take` of ``demand`` units (ids leave the
+    queue at the ticket cursor), a release is a `post` (ids re-enter at
+    the grant cursor and the TWAHash buckets of the enabled ticket range
+    are poked, staging block waiters for re-examination);
+  * **sequences are waiters**: admission gates on BOTH resources — a free
+    slot (the QoS round, unchanged) and the sequence's worst-case block
+    demand ``⌈(prompt_len + max_new)/block_size⌉``
+    (`admission.functional_qos.block_gate`): the longest FCFS prefix of
+    QoS-admitted rows whose cumulative demand fits the pool is granted;
+    the rest are *block-stalled* — their slot credit is refunded to their
+    tenant and they stay live in the backlog, retrying every round (FCFS
+    is strict: an unfit row blocks all later rows, so small sequences can
+    never starve a large one);
+  * **preemption is a tombstoned take**: a deadline-preempted slot's
+    blocks are posted back BEFORE this round's admission (they feed the
+    same round's gate, like its slot unit feeds the same round's
+    replenish); completion posts blocks back after decode, banking them
+    for the next round — exactly the slot-unit timing;
+  * the per-slot **block tables** (``EngineState.kv.tbl``) map slot ×
+    block-ordinal → pool block id; `kernels/paged_decode` streams
+    attention over exactly the live blocks (bytes ∝ live tokens, not
+    ∝ S·C as with the dense rings).
 """
 
 from __future__ import annotations
@@ -51,8 +84,20 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..admission.functional_qos import QoSState, qos_scan_round
-from ..core.functional import SemaState, _sdist, make_sema, post_batch, take_batch
+from ..admission.functional_qos import QoSState, block_gate, qos_scan_round
+from ..core.functional import (
+    BlockPool,
+    SemaState,
+    _sdist,
+    make_block_pool,
+    make_sema,
+    pool_alloc,
+    pool_free_count,
+    pool_release,
+    post_batch,
+    segment_counts,
+    take_batch,
+)
 
 # admission-order sort key packs (clamped ticket distance, tenant index)
 # into one int32: distances beyond ±2²⁰ cannot occur for admitted rows
@@ -91,6 +136,15 @@ class Slots(NamedTuple):
     pos: jax.Array       # (S,) i32 — KV write cursor / absolute position
 
 
+class KVPool(NamedTuple):
+    """Block-paged KV state: the TWA block semaphore over the circular
+    free queue (`core.functional.BlockPool`) plus the per-slot block
+    tables the paged-decode kernel streams through."""
+
+    pool: BlockPool      # free queue + block semaphore (grant−ticket = free)
+    tbl: jax.Array       # (S, MB) i32 — per-slot block ids, -1 = unallocated
+
+
 class EngineState(NamedTuple):
     """The donated on-device engine pytree carried through the scan."""
 
@@ -100,6 +154,7 @@ class EngineState(NamedTuple):
     round_no: jax.Array  # i32 scalar — global engine round counter
     backlog: Backlog
     slots: Slots
+    kv: Optional[KVPool] = None  # block-paged KV pool (None = dense rings)
 
 
 class RoundOut(NamedTuple):
@@ -124,14 +179,23 @@ AdmitFn = Optional[Callable]
 
 def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
                       prompt_cap: int, *, free_units=0,
-                      slot_table: int = 64) -> EngineState:
+                      slot_table: int = 64, kv_blocks: int = 0,
+                      kv_slot_blocks: int = 0) -> EngineState:
     """Fresh device state (empty backlog, idle slots).  The scheduler
     refreshes backlog/slot rows from its host queues at each launch; the
-    QoS state is the one source of truth shared with the host path."""
+    QoS state is the one source of truth shared with the host path.
+    ``kv_blocks`` > 0 attaches a block-paged KV pool of that many blocks
+    (power of two) with ``kv_slot_blocks``-entry per-slot block tables."""
     assert backlog_cap >= n_slots, "backlog capacity must cover the slots"
     S, B, P = n_slots, backlog_cap, prompt_cap
     zb = jnp.zeros((B,), jnp.int32)
+    kv = None
+    if kv_blocks:
+        assert kv_slot_blocks > 0, "paged pool needs a per-slot table size"
+        kv = KVPool(pool=make_block_pool(kv_blocks, table_size=slot_table),
+                    tbl=jnp.full((S, kv_slot_blocks), -1, jnp.int32))
     return EngineState(
+        kv=kv,
         qos=qos,
         slot_sema=make_sema(count=n_slots, table_size=slot_table),
         free=jnp.asarray(free_units, jnp.int32),
@@ -158,6 +222,29 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
     )
 
 
+def _fcfs_key(backlog: Backlog, grant: jax.Array, mask: jax.Array):
+    """Packed global admission-order key (wrap-safe signed ticket distance
+    from the post-round grant frontier, tenant-index tiebreak); rows
+    outside ``mask`` get the INT32_MAX sentinel.  Shared by slot
+    assignment and the block gate — host and device MUST sort by the same
+    total order for the multi-resource prefix to be bit-identical
+    (`ContinuousBatchingEngine._kv_gate` mirrors this in numpy)."""
+    d = _sdist(backlog.ticket, grant[backlog.tenant])
+    return jnp.where(
+        mask,
+        (jnp.clip(d, -_D_CLAMP, _D_CLAMP) << _T_BITS) + backlog.tenant,
+        jnp.iinfo(jnp.int32).max)
+
+
+def _block_demand(backlog: Backlog, block_size: int) -> jax.Array:
+    """Worst-case block demand per backlog row: every token the sequence
+    can ever hold (truncated prompt + max_new) — acquired in full at
+    admission, so decode can never stall mid-sequence."""
+    return jnp.maximum(
+        (backlog.prompt_len + backlog.max_new + block_size - 1) // block_size,
+        1)
+
+
 def _assign_slots(state: EngineState, admitted: jax.Array):
     """Map admitted backlog rows to free slots: rows in wrap-safe per-tenant
     FCFS admission order (signed ticket distance from the post-round grant
@@ -168,11 +255,7 @@ def _assign_slots(state: EngineState, admitted: jax.Array):
     S = sl.busy.shape[0]
     B = bl.valid.shape[0]
 
-    d = _sdist(bl.ticket, state.qos.grant[bl.tenant])
-    key = jnp.where(
-        admitted,
-        (jnp.clip(d, -_D_CLAMP, _D_CLAMP) << _T_BITS) + bl.tenant,
-        jnp.iinfo(jnp.int32).max)
+    key = _fcfs_key(bl, state.qos.grant, admitted)
     order = jnp.argsort(key, stable=True)        # admitted rows first, FCFS
     n_adm = jnp.sum(admitted.astype(jnp.int32))
 
@@ -200,14 +283,21 @@ def _assign_slots(state: EngineState, admitted: jax.Array):
 
 
 def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
-                 admit_fn: AdmitFn = None, admit_impl=None):
+                 admit_fn: AdmitFn = None, admit_impl=None,
+                 block_size: int = 0):
     """One fused engine iteration — the pure-functional `step()`.
 
     ``admit_impl`` overrides the admission-round implementation (signature
     of `functional_qos.qos_round`); the default is the functional path, and
     the scheduler substitutes `kernels.qos_admission.qos_round_fused` on
     TPU (bit-identical — tests/test_qos_kernel.py).
+
+    With ``state.kv`` set (block-paged KV pool), ``block_size`` must be the
+    static pool block size: admission additionally gates on worst-case
+    block demand (see the module docstring's block-semaphore mapping).
     """
+    paged = state.kv is not None
+    assert not paged or block_size > 0, "paged pool needs block_size"
     sl, bl = state.slots, state.backlog
     S = sl.busy.shape[0]
     now = jnp.asarray(now, jnp.float32)
@@ -220,6 +310,17 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     sl = sl._replace(busy=sl.busy & ~pre,
                      row=jnp.where(pre, -1, sl.row))
     state = state._replace(slots=sl, slot_sema=post_batch(state.slot_sema, n_pre))
+    if paged:
+        # preempted slots' blocks post back BEFORE admission — they feed
+        # THIS round's block gate, mirroring the slot-unit feedback.  The
+        # release is an identity on an empty mask, so it is cond-skipped
+        # at runtime (most rounds preempt nothing — real wall-time inside
+        # the compiled scan, bit-identical either way).
+        state = state._replace(kv=jax.lax.cond(
+            jnp.any(pre), lambda kv: KVPool(
+                pool=pool_release(kv.pool, kv.tbl, pre),
+                tbl=jnp.where(pre[:, None], -1, kv.tbl)),
+            lambda kv: kv, state.kv))
 
     # (2) the QoS admission round, preemption-freed units feeding replenish.
     # The round only runs when live rows exist — the host path's early
@@ -240,6 +341,27 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 
     qos, admitted, expired, leftover = jax.lax.cond(
         jnp.any(alive), _round, _skip, (state.qos, state.free))
+
+    # (2b) multi-resource gate: of the QoS-admitted rows, only the FCFS
+    # prefix whose cumulative worst-case block demand fits the free pool
+    # is granted; block-stalled rows refund their tenant's slot credit
+    # and stay live in the backlog (they retry every round).  Cond-skipped
+    # when the QoS round admitted nothing (gate/refund are identities on
+    # an empty mask — the host path's ``admitted.any()`` early-out).
+    if paged:
+        demand = _block_demand(bl, block_size)
+
+        def _gate(args):
+            qos, admitted = args
+            granted = block_gate(admitted, demand,
+                                 _fcfs_key(bl, qos.grant, admitted),
+                                 pool_free_count(state.kv.pool))
+            stalled = admitted & ~granted
+            return qos._replace(consumed=qos.consumed - segment_counts(
+                bl.tenant, stalled, qos.ticket.shape[0])), granted
+
+        qos, admitted = jax.lax.cond(
+            jnp.any(admitted), _gate, lambda a: a, (qos, admitted))
     rno = state.round_no
     bl = bl._replace(
         valid=alive & ~admitted & ~expired,
@@ -249,6 +371,19 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 
     # (3) slot assignment (FCFS → ascending free slots)
     state, rows, assign, tgt = _assign_slots(state, admitted)
+    if paged:
+        # wrap-safe semaphore take of each granted slot's demand: ids pop
+        # off the circular free queue at the ticket cursor in slot order
+        # (cond-skipped when nothing was assigned — alloc of 0 is identity)
+        def _alloc(kv):
+            counts = jnp.zeros((S,), jnp.int32).at[tgt].set(
+                jnp.where(assign, demand[rows], 0), mode="drop")
+            pool, ids = pool_alloc(kv.pool, counts, kv.tbl.shape[1])
+            return KVPool(pool=pool,
+                          tbl=jnp.where(counts[:, None] > 0, ids, kv.tbl))
+
+        state = state._replace(kv=jax.lax.cond(
+            jnp.any(assign), _alloc, lambda kv: kv, state.kv))
     if admit_fn is not None:  # in-graph prefill for newly admitted slots
         model = admit_fn(model, state, rows, assign, tgt)
 
@@ -271,6 +406,14 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     state = state._replace(
         slots=sl, slot_sema=post_batch(state.slot_sema, n_fin),
         free=leftover + n_fin, round_no=rno + 1)
+    if paged:
+        # completed slots post their blocks back AFTER decode — banked for
+        # the NEXT round's gate, exactly the slot-unit completion timing
+        state = state._replace(kv=jax.lax.cond(
+            jnp.any(fin), lambda kv: KVPool(
+                pool=pool_release(kv.pool, kv.tbl, fin),
+                tbl=jnp.where(fin[:, None], -1, kv.tbl)),
+            lambda kv: kv, state.kv))
     ys = RoundOut(tokens=toks, emit=emit, fin=fin, pre=pre, row=finrow,
                   prerow=prerow,
                   n_live=jnp.sum(alive.astype(jnp.int32)),
@@ -279,7 +422,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 
 
 def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
-                  admit_fn: AdmitFn = None, admit_impl=None):
+                  admit_fn: AdmitFn = None, admit_impl=None,
+                  block_size: int = 0):
     """K fused engine rounds as one `lax.scan` — K host round-trips become
     one launch + one drain.  ``nows``: (K,) f32 epoch-relative timestamps
     (the host projects them at launch; in-graph time never advances on its
@@ -288,7 +432,8 @@ def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
     def body(carry, now):
         st, m = carry
         st, m, ys = engine_round(st, m, now, token_fn=token_fn,
-                                 admit_fn=admit_fn, admit_impl=admit_impl)
+                                 admit_fn=admit_fn, admit_impl=admit_impl,
+                                 block_size=block_size)
         return (st, m), ys
 
     (state, model), ys = jax.lax.scan(body, (state, model), nows)
@@ -296,15 +441,17 @@ def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
 
 
 @functools.partial(jax.jit, static_argnames=("token_fn", "admit_fn",
-                                             "admit_impl"),
+                                             "admit_impl", "block_size"),
                    donate_argnums=(0, 1))
 def megastep_jit(state: EngineState, model, nows, *, token_fn: TokenFn,
-                 admit_fn: AdmitFn = None, admit_impl=None):
+                 admit_fn: AdmitFn = None, admit_impl=None,
+                 block_size: int = 0):
     """Donated-jit entry: the EngineState and model pytrees are donated, so
     steady-state serving re-uses their device buffers across megasteps
     instead of reallocating per launch."""
     return megastep_scan(state, model, nows, token_fn=token_fn,
-                         admit_fn=admit_fn, admit_impl=admit_impl)
+                         admit_fn=admit_fn, admit_impl=admit_impl,
+                         block_size=block_size)
 
 
 def fused_round_impl(state, tenant_ids, tickets, alive, deadlines, now,
@@ -375,6 +522,84 @@ def paged_attn_admit_fn(model, state: EngineState, rows, mask, slots):
         "v": model["v"].at[tgt].set(vc, mode="drop"),
         "pos": model["pos"].at[tgt].set(posc, mode="drop"),
     }
+
+
+def make_paged_pool_model(key, vocab: int, d: int, num_blocks: int,
+                          block_size: int):
+    """Single-layer attention LM over the SHARED block-paged KV pool — the
+    successor of :func:`make_paged_attn_model`'s per-slot rings (kept as
+    the dense baseline): KV lives in (NB, BS) pool blocks owned by the TWA
+    block semaphore; which slot reads/writes which block is entirely the
+    engine's block tables (`EngineState.kv.tbl`)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "emb": jax.random.normal(k1, (vocab, d), jnp.float32) * 0.05,
+        "wo": jax.random.normal(k2, (d, d), jnp.float32) * 0.05,
+        "kp": jnp.zeros((num_blocks, block_size, 1, d), jnp.float32),
+        "vp": jnp.zeros((num_blocks, block_size, 1, d), jnp.float32),
+    }
+
+
+def paged_pool_admit_fn(model, state: EngineState, rows, mask, slots):
+    """In-graph prefill into the pool: the admitted rows' prompt embeddings
+    scatter into the blocks their slots were just granted (token j of a
+    slot lands in block ``tbl[slot, j // BS]`` offset ``j % BS``) — one
+    bulk masked scatter per round for ALL admitted slots."""
+    bl = state.backlog
+    tbl = state.kv.tbl
+    NB, BS = model["kp"].shape[:2]
+    P = bl.prompt.shape[1]
+    S = slots.shape[0]
+    ptoks = bl.prompt[rows]                        # (S, P)
+    plens = bl.prompt_len[rows]                    # (S,)
+    pe = model["emb"][ptoks]                       # (S, P, d)
+    j = jnp.arange(P, dtype=jnp.int32)
+    stbl = tbl[jnp.where(mask, slots, 0)]          # (S, MB)
+    bid = jnp.take_along_axis(
+        stbl, jnp.broadcast_to((j // BS)[None, :], (S, P)), axis=1)
+    valid = mask[:, None] & (j[None, :] < plens[:, None]) & (bid >= 0)
+    bsel = jnp.where(valid, bid, NB)               # out-of-range → dropped
+    off = jnp.broadcast_to((j % BS)[None, :], (S, P))
+    return {
+        **model,
+        "kp": model["kp"].at[bsel, off, 0].set(pe, mode="drop"),
+        "vp": model["vp"].at[bsel, off, 0].set(pe, mode="drop"),
+    }
+
+
+def paged_pool_token_fn(model, state: EngineState):
+    """Pool-paged single-token decode: write the current token's KV into
+    the slot's cursor block, attend over the slot's table-gathered blocks,
+    and greedy-sample.  The in-graph attention is the VECTORIZED dense
+    view of the table (`kernels.ref.paged_gather_kv` — the gathered width
+    is the per-slot table, ∝ the slot's worst-case demand, never the pool
+    or a global ring); the Pallas kernel `kernels/paged_decode` is the
+    TPU path that additionally skips unwritten tail blocks in HBM (its
+    sequential-row oracle `ref.paged_decode_ref` exists for bit-exactness,
+    not for in-scan throughput)."""
+    from ..kernels.ref import decode_attention_ref, paged_gather_kv
+
+    sl = state.slots
+    kv = state.kv
+    NB, BS = model["kp"].shape[:2]
+    S, MB = kv.tbl.shape
+    cur = model["emb"][sl.token]                   # (S, d)
+    rows_i = jnp.arange(S, dtype=jnp.int32)
+    col = jnp.clip(sl.pos // BS, 0, MB - 1)
+    bid = kv.tbl[rows_i, col]                      # current write block
+    wr = sl.busy & (bid >= 0)
+    bsel = jnp.where(wr, bid, NB)
+    off = sl.pos % BS
+    kp = model["kp"].at[bsel, off, 0].set(cur, mode="drop")
+    vp = model["vp"].at[bsel, off, 0].set(cur, mode="drop")
+    lens = jnp.where(sl.busy, sl.pos + 1, 0)       # attend incl. current
+    kd, kpos = paged_gather_kv(kp, kv.tbl, lens)
+    vd, _ = paged_gather_kv(vp, kv.tbl, lens)
+    o = decode_attention_ref(cur[:, None, :], kd, vd, kpos,
+                             jnp.maximum(lens - 1, 0))  # (S, 1, d)
+    logits = (o[:, 0] @ model["wo"]) @ model["emb"].T
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return toks, {**model, "kp": kp, "vp": vp}
 
 
 def paged_attn_token_fn(model, state: EngineState):

@@ -126,6 +126,7 @@ class ContinuousBatchingEngine:
         clock: Callable[[], float] = time.monotonic,
         backlog_cap: int = 4096,
         prompt_cap: int = 32,
+        kv_pool: Optional[tuple] = None,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -145,6 +146,27 @@ class ContinuousBatchingEngine:
         self._backlog_cap = backlog_cap  # megastep device backlog ceiling
         self._prompt_cap = prompt_cap  # megastep padded prompt ceiling
         self.megastep_model = None  # device model pytree (megastep mode)
+        # --- block-paged KV pool (core.functional.BlockPool) ---
+        # ``kv_pool=(num_blocks, block_size[, max_blocks_per_seq])``:
+        # admission gates on BOTH a free slot and the request's worst-case
+        # block demand (multi-resource admission); the host keeps only the
+        # free-block COUNTER (bit-identical to the device semaphore's
+        # grant − ticket by construction) — block identities live in the
+        # device pool, so paged engines must decode via megastep.
+        self._kv_pool = kv_pool
+        if kv_pool is not None:
+            if tenants is None:
+                raise ValueError("kv_pool requires QoS mode (tenants=...)")
+            nb, bs, *rest = kv_pool
+            nb, bs = int(nb), int(bs)
+            if nb <= 0 or (nb & (nb - 1)) or bs <= 0:
+                raise ValueError(
+                    f"kv_pool needs a power-of-two block count and a "
+                    f"positive block size, got {kv_pool}")
+            self._kv_blocks, self._kv_bs = nb, bs
+            self._kv_mb = int(rest[0]) if rest else nb  # table width
+            self._kv_free_blocks = nb
+            self._kv_state = None  # persisted device KVPool across megasteps
         # --- multi-tenant QoS admission (admission.functional_qos) ---
         self._tenants = tenants
         if tenants is not None:
@@ -224,6 +246,14 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"unregistered tenant(s) {sorted(unknown)}; this engine "
                 f"serves tenants {list(self._tenant_names)}")
+        if self._kv_pool is not None:
+            cap = min(self._kv_mb, self._kv_blocks)
+            for r in reqs:
+                if self._kv_demand(r) > cap:
+                    raise ValueError(
+                        f"request rid={r.rid} needs {self._kv_demand(r)} KV "
+                        f"blocks (> {cap}): prompt+max_new must fit "
+                        f"{cap * self._kv_bs} pooled tokens")
         with self._lock:
             now = self._clock()
             ids = [self._tindex[r.tenant_id] for r in reqs]
@@ -256,6 +286,45 @@ class ContinuousBatchingEngine:
             # Undistributed slots flow to the new demand immediately (the
             # work-conserving fast path of the hierarchy).
             self._replenish_qos(0)
+
+    def _kv_demand(self, r: Request) -> int:
+        """Worst-case block demand — MUST mirror the in-graph
+        `engine_state._block_demand`: the device sees the prompt truncated
+        to the padded cap, so the host clamps the same way."""
+        plen = min(len(r.prompt), self._prompt_cap) or 1
+        return max(1, -(-(plen + r.max_new_tokens) // self._kv_bs))
+
+    def _kv_gate(self, cands: list[tuple[Request, int]]):
+        """Host mirror of `admission.functional_qos.block_gate` + the
+        in-graph `_fcfs_key`: of the QoS-admitted candidates, grant the
+        longest FCFS prefix (wrap-safe clamped ticket distance from the
+        post-round grant frontier, tenant-index tiebreak — byte-identical
+        key arithmetic) whose cumulative block demand fits the free pool;
+        strict FCFS, no bypass.  Consumes the granted demand from the
+        host counter.  Returns (granted, stalled) index lists into
+        ``cands``, both in gate order."""
+        from .engine_state import _D_CLAMP, _T_BITS
+
+        grants = np.asarray(self.qos.grant)
+
+        def key(i: int) -> int:
+            r, tidx = cands[i]
+            d = (r.ticket - int(grants[tidx])) & 0xFFFFFFFF
+            d = d - (1 << 32) if d >= (1 << 31) else d
+            return (max(-_D_CLAMP, min(_D_CLAMP, d)) << _T_BITS) + tidx
+
+        order = sorted(range(len(cands)), key=key)
+        free = self._kv_free_blocks
+        granted, stalled = [], []
+        for i in order:
+            dem = self._kv_demand(cands[i][0])
+            if not stalled and dem <= free:  # strict FCFS: first misfit blocks all
+                free -= dem
+                granted.append(i)
+            else:
+                stalled.append(i)
+        self._kv_free_blocks = free
+        return granted, stalled
 
     def _fcfs_sort(self, reqs: list[Request]) -> None:
         """Sort admitted requests into wrap-safe admission order: signed
@@ -329,8 +398,23 @@ class ContinuousBatchingEngine:
         self.qos = state
         self._qos_free = int(leftover)
         self.stats.backlog_scans += len(rows)
-        admitted = np.asarray(admitted)
+        admitted = np.asarray(admitted).copy()
         expired = np.asarray(expired)
+        if self._kv_pool is not None and admitted.any():
+            # multi-resource gate: block-stalled rows lose their grant and
+            # refund the tenant's slot credit (they stay queued and are
+            # re-examined next round — the in-graph round does exactly
+            # this via `block_gate` + the consumed refund)
+            cidx = np.flatnonzero(admitted)
+            _, stalled = self._kv_gate([(rows[i], int(ids[i])) for i in cidx])
+            if stalled:
+                bump = np.zeros(len(self._tenant_names), np.uint32)
+                for i in stalled:
+                    admitted[cidx[i]] = False
+                    bump[ids[cidx[i]]] += 1
+                    rows[cidx[i]].fast = True  # retry while blocks drain
+                self.qos = self.qos._replace(
+                    consumed=self.qos.consumed - jnp.asarray(bump))
         out: list[Request] = []
         for r, i, a, e in zip(rows, ids, admitted, expired):
             if e:
@@ -390,6 +474,31 @@ class ContinuousBatchingEngine:
         if spent.any():
             self.qos = self.qos._replace(
                 consumed=self.qos.consumed + jnp.asarray(spent))
+        if self._kv_pool is not None and admitted:
+            # multi-resource gate: roll the block-stalled suffix back onto
+            # the queue heads (per tenant the stalled candidates are a
+            # contiguous FIFO suffix — global FCFS preserves per-tenant
+            # ticket order), refund their slot credit, and flag them for
+            # re-examination once blocks drain
+            cands = [(r, self._tindex[r.tenant_id]) for r in admitted]
+            _, stalled = self._kv_gate(cands)
+            if stalled:
+                unbump = np.zeros(len(self._tenant_names), np.uint32)
+                by_tenant: dict[int, list[Request]] = {}
+                for i in stalled:
+                    r, tidx = cands[i]
+                    by_tenant.setdefault(tidx, []).append(r)
+                for tidx, rs in by_tenant.items():
+                    for r in reversed(rs):  # gate order = ticket order
+                        self._tenant_queues[tidx].appendleft(r)
+                        self._tenant_live[tidx] += 1
+                        self.tenant_admitted[r.tenant_id] -= 1
+                        unbump[tidx] += 1
+                        r.fast = True
+                self.qos = self.qos._replace(
+                    consumed=self.qos.consumed - jnp.asarray(unbump))
+                stall_ids = {id(cands[i][0]) for i in stalled}
+                admitted = [r for r in admitted if id(r) not in stall_ids]
         self._fcfs_sort(admitted)
         return admitted
 
@@ -471,6 +580,10 @@ class ContinuousBatchingEngine:
                 self.tenant_expired[req.tenant_id] += 1
         else:
             self.stats.finished += 1
+        if self._kv_pool is not None:
+            # the sequence's worst-case block reservation posts back — the
+            # host counter mirrors the device block semaphore's `post`
+            self._kv_free_blocks += self._kv_demand(req)
         # slot freed → post: advances grant AND pokes the bucket of the next
         # waiting ticket (successor staging — the paper's SemaPost).  In QoS
         # mode the freed slot instead re-enters the weighted replenishment.
@@ -496,6 +609,14 @@ class ContinuousBatchingEngine:
     def step(self, sample_fn: Callable[[np.ndarray], np.ndarray]) -> int:
         """One engine iteration: preempt expired → admit → prefill admitted
         → decode active.  Returns number of active rows."""
+        if self._kv_pool is not None and self._kv_state is not None:
+            # the device block pool already tracks reservations the host
+            # counter can't see — a host admission here would double-book
+            # blocks and decode against tables that don't exist on device
+            raise RuntimeError(
+                "paged engine is decoding via megastep; host step() would "
+                "desync the device block pool (serve a kv_pool engine "
+                "through ONE of the two paths)")
         with self._lock:
             rnd = self._round_no
             self.stats.host_syncs += 1
@@ -528,7 +649,7 @@ class ContinuousBatchingEngine:
     # ----------------------------------------------------------- megastep ---
 
     def megastep(self, K: int, *, token_fn=None, admit_fn=None,
-                 nows=None) -> int:
+                 nows=None, admit_impl="auto") -> int:
         """Device-resident decode megastep: K fused engine rounds as ONE
         jitted `lax.scan` (`serving.engine_state.megastep_jit`) over a
         donated on-device :class:`~repro.serving.engine_state.EngineState`
@@ -548,8 +669,18 @@ class ContinuousBatchingEngine:
         in ``self.megastep_model`` and is donated across launches.
         ``nows``: optional (K,) float timestamps RELATIVE to launch
         (default: all 0.0 — time frozen at launch for the whole
-        megastep).  Returns the number of busy slots after the last
-        round.
+        megastep).  ``admit_impl`` overrides the in-graph admission-round
+        implementation (``"auto"``: the fused Pallas pass on TPU when
+        ``use_kernel``, else the functional path; tests pass
+        `engine_state.fused_round_impl` explicitly to exercise the kernel
+        in interpret mode — bit-identical either way).
+
+        With ``kv_pool=`` the scanned round allocates from / releases to
+        the block-paged KV pool; the device `KVPool` (block semaphore +
+        tables) persists across launches alongside ``megastep_model``, so
+        paged engines must decode through megastep (host `step()` keeps
+        only the free-block counter).  Returns the number of busy slots
+        after the last round.
         """
         from .engine_state import (
             Slots,
@@ -596,8 +727,24 @@ class ContinuousBatchingEngine:
                        + [len(r.prompt) for r in self.active.values()] + [1])
             P = min(_next_pow2(maxp), self._prompt_cap)
 
-            state = make_engine_state(self.qos, S, B, P,
-                                      free_units=self._qos_free)
+            paged = self._kv_pool is not None
+            if paged and self._kv_state is None and self.active:
+                # slots admitted by host step() have no device block
+                # tables — their KV does not exist in the pool
+                raise RuntimeError(
+                    "paged engine has host-admitted active slots; serve a "
+                    "kv_pool engine exclusively via megastep")
+            fresh_kv = paged and self._kv_state is None
+            state = make_engine_state(
+                self.qos, S, B, P, free_units=self._qos_free,
+                kv_blocks=self._kv_blocks if fresh_kv else 0,
+                kv_slot_blocks=self._kv_mb if fresh_kv else 0)
+            if paged and not fresh_kv:
+                # block semaphore + tables persist launch-to-launch (the
+                # pool's identity mapping must survive with the model KV);
+                # building a throwaway fresh pool first would waste an
+                # (S, MB) table + NB-entry queue allocation per launch
+                state = state._replace(kv=self._kv_state)
             valid = np.zeros(B, bool)
             ids = np.zeros(B, np.int32)
             tks = np.zeros(B, np.uint32)
@@ -637,7 +784,13 @@ class ContinuousBatchingEngine:
                 sem[slot] = len(r.out_tokens)
                 stok[slot] = (r.out_tokens[-1] if r.out_tokens
                               else (r.prompt[-1] if r.prompt else 0))
-                spos[slot] = len(r.prompt) + len(r.out_tokens)
+                # device position, NOT raw prompt length: prompts longer
+                # than the cap were truncated at admission, and the paged
+                # block tables / dense ring cursors index by the DEVICE
+                # cursor — an untruncated re-seed would shift every later
+                # KV write past the reservation
+                spos[slot] = (min(len(r.prompt), self._prompt_cap) or 1) \
+                    + len(r.out_tokens)
             state = state._replace(
                 round_no=jnp.asarray(base, jnp.int32),
                 backlog=state.backlog._replace(
@@ -660,9 +813,10 @@ class ContinuousBatchingEngine:
                 nows_a = np.asarray(nows, np.float32)
                 if nows_a.shape != (K,):
                     raise ValueError(f"nows must be shape ({K},)")
-            admit_impl = (fused_round_impl
-                          if self._use_kernel
-                          and jax.default_backend() == "tpu" else None)
+            if admit_impl == "auto":
+                admit_impl = (fused_round_impl
+                              if self._use_kernel
+                              and jax.default_backend() == "tpu" else None)
 
             # donation requires every leaf to own a distinct buffer: the
             # freshly-built state is small (copy unconditionally — fresh
@@ -678,7 +832,8 @@ class ContinuousBatchingEngine:
                     lambda x: jnp.array(x, copy=True), model)
             st, model, ys = megastep_jit(
                 state, model, jnp.asarray(nows_a), token_fn=token_fn,
-                admit_fn=admit_fn, admit_impl=admit_impl)
+                admit_fn=admit_fn, admit_impl=admit_impl,
+                block_size=self._kv_bs if paged else 0)
             self.megastep_model = model
             self._megastep_model_last = model
 
@@ -752,6 +907,12 @@ class ContinuousBatchingEngine:
                                if not st_h.slots.busy[s]]
             self._qos_free = int(st_h.free)
             self.qos = st.qos  # keep the (fresh) device arrays
+            if paged:
+                self._kv_state = st.kv
+                # host counter ← the block semaphore's counter identity
+                self._kv_free_blocks = int(np.int32(
+                    np.uint32(st_h.kv.pool.sema.grant)
+                    - np.uint32(st_h.kv.pool.sema.ticket)))
             self._round_no = base + K
             return int(st_h.slots.busy.sum())
 
@@ -765,6 +926,13 @@ class ContinuousBatchingEngine:
             "queue_depth": max(0, int(self.sema.ticket) - int(self.sema.grant)),
             "stats": self.stats.__dict__.copy(),
         }
+        if self._kv_pool is not None:
+            # block-pool gauges (the block semaphore's counter identity):
+            # free = unreserved pool blocks, live = reserved by admitted
+            # sequences' worst-case demand
+            tel["kv_blocks_free"] = int(self._kv_free_blocks)
+            tel["kv_blocks_live"] = int(self._kv_blocks
+                                        - self._kv_free_blocks)
         if self._tenants is not None:
             total = sum(self.tenant_admitted.values())
             tel["backlog"] = int(self._tenant_live.sum())

@@ -1,0 +1,429 @@
+"""Block-paged KV pool (TWA block semaphore) — the PR-4 tentpole tests:
+
+  * property: with ``kv_pool=`` configured, ``megastep(K)`` stays
+    round-for-round bit-identical to K sequential ``step()`` calls under
+    mixed prompt/max_new lengths that force block-stall rounds (the
+    multi-resource admission gate), incl. 2³² QoS ticket wrap;
+  * property: **block conservation** — under random admit / complete /
+    deadline-preempt sequences (incl. the block semaphore's own counters
+    parked just below 2³²), ``allocated + free == num_blocks`` at every
+    round, no block id ever aliases two live slots, and the free-queue ∪
+    live-table multiset is exactly {0..NB-1};
+  * strict-FCFS block gate: an oversized sequence at the head of the line
+    blocks later small ones (no bypass → no starvation of large
+    sequences), and admission resumes in ticket order as blocks drain;
+  * the wired-but-untested ``admit_impl=engine_state.fused_round_impl``
+    inside megastep, interpret mode (ROADMAP open item) — property-tested
+    bit-identical to the functional admission path;
+  * telemetry: ``kv_blocks_free`` / ``kv_blocks_live`` gauges track the
+    reservation lifecycle;
+  * `core.functional.BlockPool` unit behavior (alloc/release id flow
+    across the counter wrap).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.admission.functional_qos import make_qos, qos_take
+from repro.core.functional import (
+    BlockPool,
+    make_block_pool,
+    pool_alloc,
+    pool_free_count,
+    pool_release,
+)
+from repro.serving.engine_state import (
+    KVPool,
+    engine_round,
+    fused_round_impl,
+    make_engine_state,
+    rid_token_fn,
+)
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+DT = 0.25  # f32-exact virtual-time grid (see tests/test_megastep.py)
+
+
+def _rid_step_fn(active):
+    return np.array([r.rid * 1000 + len(r.out_tokens) for r in active],
+                    np.int64)
+
+
+_IDENT = lambda lg: lg.astype(np.int64)  # noqa: E731
+
+
+# ------------------------------------------------ BlockPool unit behavior ----
+
+
+def test_block_pool_alloc_release_wrap():
+    """Ids leave at the ticket cursor and re-enter at the grant cursor;
+    the counter identity survives the 2³² wrap (pow2 queue positions)."""
+    NB = 8
+    pool = make_block_pool(NB, start=(1 << 32) - 3)  # counters straddle wrap
+    assert int(pool_free_count(pool)) == NB
+    pool, ids = pool_alloc(pool, jnp.asarray([3, 0, 2], jnp.int32), max_per=4)
+    ids = np.asarray(ids)
+    assert int(pool_free_count(pool)) == NB - 5
+    got = ids[ids >= 0]
+    assert len(got) == 5 and len(set(got.tolist())) == 5
+    assert (ids[1] == -1).all() and (ids[0, 3] == -1) and (ids[2, 2:] == -1).all()
+    # release consumer 0 only; its 3 ids come back in FIFO id order
+    pool = pool_release(pool, jnp.asarray(ids), jnp.asarray([True, False, False]))
+    assert int(pool_free_count(pool)) == NB - 2
+    pool2, ids2 = pool_alloc(pool, jnp.asarray([6, 0, 0], jnp.int32), max_per=8)
+    ids2 = np.asarray(ids2)[0, :6]
+    live = set(np.asarray(ids)[2, :2].tolist())
+    assert live.isdisjoint(ids2.tolist())          # never re-issue a live id
+    assert int(pool_free_count(pool2)) == 0
+    assert sorted(ids2.tolist() + sorted(live)) == list(range(NB))
+
+    with pytest.raises(AssertionError):
+        make_block_pool(12)  # non-pow2 queue positions break at wrap
+
+
+# ------------------------------------------- paged megastep ≡ host loop ------
+
+
+def _mk_engine(clk, *, kv_pool, n_slots=4, weights=None, wrap=False):
+    weights = weights or {"gold": 2.0, "bronze": 1.0}
+    eng = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, n_slots, tenants=dict(weights),
+        use_kernel=True, clock=lambda: clk[0], kv_pool=kv_pool)
+    if wrap:
+        base = jnp.uint32((1 << 32) - 7)
+        S = len(weights)
+        eng.qos = eng.qos._replace(
+            ticket=jnp.full((S,), base), grant=jnp.full((S,), base),
+            consumed=jnp.full((S,), base))
+    return eng
+
+
+def _workload(seed, n_req, deadline_frac):
+    rng = np.random.default_rng(seed)
+    names = ["gold", "bronze"]
+    reqs = []
+    for i in range(n_req):
+        dl = DT * int(rng.integers(0, 16)) if rng.random() < deadline_frac \
+            else None
+        reqs.append(Request(
+            rid=i, prompt=[1] * int(rng.integers(1, 7)),
+            max_new_tokens=1 + int(rng.integers(0, 12)),
+            tenant_id=names[int(rng.integers(0, 2))], deadline=dl))
+    return reqs
+
+
+def _compare_paged_engines(seed, deadline_frac, wrap, K=14, n_req=16):
+    """Mixed lengths against a 16-block pool of block size 4: worst-case
+    demands of 1–5 blocks guarantee block-stall rounds; every observable
+    must still match the host loop round-for-round."""
+    clk = [0.0]
+    eh = _mk_engine(clk, kv_pool=(16, 4), wrap=wrap)
+    em = _mk_engine(clk, kv_pool=(16, 4), wrap=wrap)
+    rh = _workload(seed, n_req, deadline_frac)
+    rm = _workload(seed, n_req, deadline_frac)
+    eh.submit_batch(rh)
+    em.submit_batch(rm)
+    times = [k * DT for k in range(K)]
+    for t in times:
+        clk[0] = t
+        eh.step(_IDENT)
+    clk[0] = 0.0
+    em.megastep(K, token_fn=rid_token_fn, nows=np.asarray(times, np.float32))
+    for a, b in zip(rh, rm):
+        tag = f"seed={seed} rid={a.rid}"
+        assert a.out_tokens == b.out_tokens, (tag, a.out_tokens, b.out_tokens)
+        assert a.admit_round == b.admit_round, (tag, a.admit_round,
+                                                b.admit_round)
+        assert a.expired == b.expired and a.preempted == b.preempted, tag
+        assert a.expire_round == b.expire_round, tag
+    for f in eh.qos._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(eh.qos, f)), np.asarray(getattr(em.qos, f)),
+            err_msg=f"seed={seed}:{f}")
+    assert eh._qos_free == em._qos_free
+    assert eh._kv_free_blocks == em._kv_free_blocks, seed
+    assert eh.stats.admitted == em.stats.admitted
+    assert eh.stats.preempted == em.stats.preempted
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.5]), st.booleans())
+def test_paged_megastep_equals_host_loop_property(seed, deadline_frac, wrap):
+    """ISSUE acceptance: megastep with the pool remains round-for-round
+    bit-identical to K sequential step() calls — token streams, admission
+    rounds (incl. block-stalled retries), expiry/preemption, the QoS
+    state, and the free block counter."""
+    _compare_paged_engines(seed, deadline_frac, wrap)
+
+
+# ----------------------------------------------------- block conservation ----
+
+
+def _fresh_paged_state(n_rows, *, S=3, NB=16, BS=4, MB=8, start=0, seed=0):
+    """Engine-state-level fixture: a populated backlog against a pool whose
+    semaphore counters can be parked just below the 2³² wrap."""
+    rng = np.random.default_rng(seed)
+    qos = make_qos([2.0, 1.0], table_size=64)
+    ids = jnp.asarray(rng.integers(0, 2, n_rows), jnp.int32)
+    qos, tks, _, _ = qos_take(qos, ids, jnp.ones(n_rows, bool))
+    state = make_engine_state(qos, S, backlog_cap=max(16, n_rows), prompt_cap=8,
+                              free_units=S, kv_blocks=NB, kv_slot_blocks=MB)
+    if start:
+        state = state._replace(kv=KVPool(
+            pool=make_block_pool(NB, start=start), tbl=state.kv.tbl))
+    B = state.backlog.valid.shape[0]
+    pad = B - n_rows
+    dl = np.where(rng.random(n_rows) < 0.35,
+                  rng.integers(1, 10, n_rows) * DT, np.inf)
+    bl = state.backlog._replace(
+        valid=jnp.asarray(np.pad(np.ones(n_rows, bool), (0, pad))),
+        tenant=jnp.asarray(np.pad(np.asarray(ids), (0, pad))),
+        ticket=jnp.asarray(np.pad(np.asarray(tks), (0, pad))),
+        deadline=jnp.asarray(np.pad(dl, (0, pad), constant_values=np.inf),
+                             jnp.float32),
+        rid=jnp.asarray(np.pad(np.arange(n_rows, dtype=np.int32), (0, pad),
+                               constant_values=-1)),
+        max_new=jnp.asarray(np.pad(rng.integers(1, 10, n_rows), (0, pad))
+                            .astype(np.int32)),
+        prompt=state.backlog.prompt,
+        prompt_len=jnp.asarray(np.pad(rng.integers(1, 8, n_rows), (0, pad))
+                               .astype(np.int32)))
+    return state._replace(backlog=bl), NB, BS
+
+
+def _check_conservation(kv, NB, tag=""):
+    t = int(np.uint32(np.asarray(kv.pool.sema.ticket)))
+    g = int(np.uint32(np.asarray(kv.pool.sema.grant)))
+    free = ((g - t) + (1 << 32)) % (1 << 32)
+    assert free <= NB, (tag, free)
+    tbl = np.asarray(kv.tbl)
+    live = tbl[tbl >= 0].tolist()
+    assert len(live) == NB - free, (tag, len(live), NB - free)
+    assert len(set(live)) == len(live), (tag, "block aliased by two slots")
+    fq = np.asarray(kv.pool.free_q)
+    free_ids = [int(fq[(t + j) % NB]) for j in range(free)]
+    assert sorted(live + free_ids) == list(range(NB)), (tag, "ids lost")
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.booleans())
+def test_block_conservation_property(seed, wrap):
+    """ISSUE satellite: under random admit / complete / deadline-preempt
+    rounds (incl. the block semaphore's counters crossing 2³²),
+    allocated + free block counts are invariant and no block table ever
+    aliases two live slots."""
+    start = (1 << 32) - 5 if wrap else 0
+    state, NB, BS = _fresh_paged_state(12, start=start, seed=seed)
+    step = jax.jit(lambda s, now: engine_round(
+        s, (), now, token_fn=rid_token_fn, block_size=BS)[0])
+
+    _check_conservation(state.kv, NB, "init")
+    for k in range(64):
+        state = step(state, k * DT)
+        _check_conservation(state.kv, NB, f"round {k}")
+    # fully drained: every sequence completed or was preempted/expired
+    assert not bool(np.asarray(state.slots.busy).any())
+    assert int(pool_free_count(state.kv.pool)) == NB
+
+
+# ------------------------------------------------- strict-FCFS block gate ----
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_block_gate_strict_fcfs_no_bypass(use_kernel):
+    """An oversized head-of-line sequence whose demand exceeds the free
+    pool stalls, and LATER small sequences stall behind it (no bypass) —
+    once running sequences complete and post their blocks back, admission
+    resumes in ticket order, so the big request is never starved.  Both
+    host admission paths (fused kernel round and the TWA queue walk with
+    its stall rollback) enforce the same gate."""
+    clk = [0.0]
+    eng = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, 4, tenants={"a": 1.0},
+        use_kernel=use_kernel, clock=lambda: clk[0], kv_pool=(8, 4))
+    # two running 2-block sequences occupy 4 of 8 blocks
+    runners = [Request(rid=i, prompt=[1], max_new_tokens=5, tenant_id="a")
+               for i in range(2)]
+    eng.submit_batch(runners)
+    eng.step(_IDENT)
+    assert eng.telemetry()["kv_blocks_live"] == 4
+    # big needs 5 blocks (> 4 free) — small (1 block) must NOT overtake it
+    big = Request(rid=10, prompt=[1], max_new_tokens=18, tenant_id="a")
+    small = Request(rid=11, prompt=[1], max_new_tokens=2, tenant_id="a")
+    eng.submit_batch([big, small])
+    eng.step(_IDENT)
+    # 4 blocks are free and small's demand is 1 — yet small must NOT
+    # overtake the unfit big request (strict FCFS, no bypass)
+    assert eng.telemetry()["kv_blocks_free"] >= 1
+    assert big.slot is None and small.slot is None  # both block-stalled
+    for _ in range(10):
+        eng.step(_IDENT)
+    assert big.admit_round >= 0 and small.admit_round >= 0
+    assert big.admit_round <= small.admit_round  # FCFS held under pressure
+    while eng.stats.finished < 4:
+        eng.step(_IDENT)
+    assert eng.telemetry()["kv_blocks_free"] == 8
+
+
+def _pool_attn_run(n_slots, K, *, prompt_len, prompt_cap=4, n_req=6,
+                   vocab=40):
+    import jax
+
+    from repro.serving.engine_state import (
+        make_paged_pool_model,
+        paged_pool_admit_fn,
+        paged_pool_token_fn,
+    )
+
+    NB, BS = 32, 4
+    eng = ContinuousBatchingEngine(
+        lambda a: None, lambda r: None, n_slots, tenants={"a": 1.0},
+        clock=lambda: 0.0, kv_pool=(NB, BS, 8), prompt_cap=prompt_cap)
+    eng.megastep_model = make_paged_pool_model(
+        jax.random.PRNGKey(0), vocab=vocab, d=16, num_blocks=NB,
+        block_size=BS)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(1, vocab, prompt_len)),
+                    max_new_tokens=7, tenant_id="a") for i in range(n_req)]
+    eng.submit_batch(reqs)
+    launches = 0
+    while eng.stats.finished < n_req and launches < 100:
+        eng.megastep(K, token_fn=paged_pool_token_fn,
+                     admit_fn=paged_pool_admit_fn)
+        launches += 1
+    assert eng.stats.finished == n_req
+    assert eng.telemetry()["kv_blocks_free"] == NB
+    return [r.out_tokens for r in reqs]
+
+
+def test_pool_attention_truncated_prompt_launch_invariance():
+    """Regression (review finding): a prompt LONGER than prompt_cap is
+    truncated at admission, so the device KV cursor sits at the truncated
+    length — the host must re-seed slot positions from the truncated
+    length across launches, or every later block write lands past the
+    reservation.  Streams must be invariant to K (launch splits) and slot
+    count."""
+    a = _pool_attn_run(n_slots=3, K=9, prompt_len=9)   # 9 > prompt_cap=4
+    b = _pool_attn_run(n_slots=3, K=2, prompt_len=9)   # same work, 5 launches
+    c = _pool_attn_run(n_slots=2, K=3, prompt_len=9)
+    assert a == b == c
+    assert all(len(t) == 7 for t in a)
+
+
+def test_paged_engine_rejects_mixed_step_and_megastep():
+    """Host step() and megastep() must not interleave on a paged engine:
+    the device block pool cannot see host-gated reservations (and vice
+    versa), so the engine refuses instead of silently double-booking."""
+
+    eng = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, 2, tenants={"a": 1.0},
+        use_kernel=True, clock=lambda: 0.0, kv_pool=(8, 4))
+    eng.submit_batch([Request(rid=0, prompt=[1], max_new_tokens=6,
+                              tenant_id="a")])
+    eng.step(_IDENT)  # host admission: no device block tables exist
+    with pytest.raises(RuntimeError):
+        eng.megastep(2, token_fn=rid_token_fn)
+    eng2 = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, 2, tenants={"a": 1.0},
+        use_kernel=True, clock=lambda: 0.0, kv_pool=(8, 4))
+    eng2.submit_batch([Request(rid=0, prompt=[1], max_new_tokens=6,
+                               tenant_id="a")])
+    eng2.megastep(2, token_fn=rid_token_fn)  # device pool now live
+    with pytest.raises(RuntimeError):
+        eng2.step(_IDENT)
+
+
+def test_kv_pool_requires_qos_and_fitting_requests():
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(_rid_step_fn, lambda r: None, 2,
+                                 kv_pool=(8, 4))
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(_rid_step_fn, lambda r: None, 2,
+                                 tenants={"a": 1.0}, kv_pool=(12, 4))
+    eng = ContinuousBatchingEngine(_rid_step_fn, lambda r: None, 2,
+                                   tenants={"a": 1.0}, kv_pool=(8, 4))
+    with pytest.raises(ValueError):  # 40 tokens > 8 blocks × 4
+        eng.submit_batch([Request(rid=0, prompt=[1] * 8, max_new_tokens=64,
+                                  tenant_id="a")])
+
+
+# -------------------------------------------------- telemetry gauges ---------
+
+
+def test_telemetry_kv_block_gauges():
+    """ISSUE satellite: `telemetry()` exposes kv_blocks_free/live next to
+    queue_depth, tracking the worst-case reservation lifecycle."""
+    clk = [0.0]
+    eng = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, 4, tenants={"a": 1.0},
+        use_kernel=True, clock=lambda: clk[0], kv_pool=(16, 4))
+    tel = eng.telemetry()
+    assert tel["kv_blocks_free"] == 16 and tel["kv_blocks_live"] == 0
+    assert "queue_depth" in tel
+    reqs = [Request(rid=i, prompt=[1] * 4, max_new_tokens=4, tenant_id="a")
+            for i in range(3)]  # 2 blocks each
+    eng.submit_batch(reqs)
+    eng.step(_IDENT)
+    tel = eng.telemetry()
+    assert tel["kv_blocks_live"] == 6 and tel["kv_blocks_free"] == 10
+    while eng.stats.finished < 3:
+        eng.step(_IDENT)
+    tel = eng.telemetry()
+    assert tel["kv_blocks_free"] == 16 and tel["kv_blocks_live"] == 0
+    # dense engines don't grow the gauges
+    dense = ContinuousBatchingEngine(_rid_step_fn, lambda r: None, 2)
+    assert "kv_blocks_free" not in dense.telemetry()
+
+
+# ------------------------------- fused kernel admission inside the scan ------
+
+
+def _mega_run(seed, deadline_frac, impl, *, kv_pool=None, K=8, n_req=10):
+    clk = [0.0]
+    eng = _mk_engine(clk, kv_pool=kv_pool, n_slots=3)
+    reqs = _workload(seed, n_req, deadline_frac)
+    eng.submit_batch(reqs)
+    times = np.asarray([k * DT for k in range(K)], np.float32)
+    eng.megastep(K, token_fn=rid_token_fn, nows=times, admit_impl=impl)
+    return eng, reqs
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.5]))
+def test_fused_round_impl_megastep_bit_identity(seed, deadline_frac):
+    """ROADMAP open item (ISSUE satellite): the wired
+    ``admit_impl=engine_state.fused_round_impl`` — the fused Pallas
+    admission kernel INSIDE the scanned megastep, interpret mode — is
+    bit-identical to the functional admission path: token streams,
+    admit/expire rounds, QoS state, and the free pool."""
+    ea, ra = _mega_run(seed, deadline_frac, None)
+    eb, rb = _mega_run(seed, deadline_frac, fused_round_impl)
+    for a, b in zip(ra, rb):
+        assert a.out_tokens == b.out_tokens, (seed, a.rid)
+        assert a.admit_round == b.admit_round, (seed, a.rid)
+        assert a.expire_round == b.expire_round, (seed, a.rid)
+    for f in ea.qos._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ea.qos, f)), np.asarray(getattr(eb.qos, f)),
+            err_msg=f"seed={seed}:{f}")
+    assert ea._qos_free == eb._qos_free
+
+
+def test_fused_round_impl_megastep_paged():
+    """The fused admission kernel composes with the block gate (the gate
+    sits outside ``admit_impl``): one paged seed, bit-identical."""
+    ea, ra = _mega_run(5, 0.4, None, kv_pool=(16, 4))
+    eb, rb = _mega_run(5, 0.4, fused_round_impl, kv_pool=(16, 4))
+    for a, b in zip(ra, rb):
+        assert a.out_tokens == b.out_tokens and a.admit_round == b.admit_round
+    assert ea._kv_free_blocks == eb._kv_free_blocks
