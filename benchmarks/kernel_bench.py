@@ -107,6 +107,41 @@ def run(metrics: dict | None = None) -> str:
         if metrics is not None:
             metrics.setdefault("oracle_err", {})[f"decode/{name.strip()}"] = err
 
+    # paged prefill (chunked-prefill kernel: in-pass pool writeback)
+    from repro.kernels.paged_prefill import paged_prefill
+    from repro.kernels.ref import paged_prefill_ref
+
+    S, CT, H, KV, hd = 4, 32, 4, 2, 64
+    NB, BS, MB = 64, 16, 8
+    ks = jax.random.split(key, 5)
+    qp_ = jax.random.normal(ks[0], (S, CT, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (S, CT, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (S, CT, KV, hd), jnp.float32)
+    kpool = jax.random.normal(ks[3], (NB, BS, KV, hd), jnp.float32)
+    vpool = jax.random.normal(ks[4], (NB, BS, KV, hd), jnp.float32)
+    tbl = jnp.arange(S * MB, dtype=jnp.int32).reshape(S, MB) % NB
+    offs = jnp.asarray([0, 24, 7, 40], jnp.int32)
+    lens = jnp.asarray([32, 32, 17, 0], jnp.int32)
+    out_k, kp2, vp2 = paged_prefill(qp_, kc, vc, kpool, vpool, tbl, offs,
+                                    lens, interpret=True)
+    out_r, kpr, vpr = paged_prefill_ref(qp_, kc, vc, kpool, vpool, tbl,
+                                        offs, lens)
+    pf_exact = bool(np.array_equal(np.asarray(out_k), np.asarray(out_r))
+                    and np.array_equal(np.asarray(kp2), np.asarray(kpr))
+                    and np.array_equal(np.asarray(vp2), np.asarray(vpr)))
+    G = H // KV
+    # q/chunk tiles + 2×(k,v) block dbuf + merge one-hot + scores + scratch
+    vm_pf = (G * CT * hd * 4 + 2 * CT * hd * 4 + 2 * 2 * BS * hd * 4
+             + BS * CT * 4 + G * CT * BS * 4
+             + (G * CT * hd + 2 * G * CT) * 4)
+    lines.append(
+        f"paged_prefill S={S} CT={CT} BS={BS} (ragged offs, idle slot, "
+        f"GQA {G}): bit-exact={pf_exact} incl. in-pass pool writeback; "
+        f"VMEM={vm_pf / 2**20:.2f}MiB")
+    if metrics is not None:
+        metrics.setdefault("oracle_err", {})["paged_prefill/bitexact"] = \
+            0.0 if pf_exact else 1.0
+
     # sema_batch
     req = jax.random.bernoulli(key, 0.6, (2048,))
     out = sema_batch(jnp.uint32(0), jnp.uint32(64), jnp.zeros((1024,), jnp.uint32),

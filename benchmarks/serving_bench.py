@@ -332,6 +332,114 @@ def run_paged_pool(metrics: dict | None = None) -> list[str]:
     return lines
 
 
+def run_longprompt(metrics: dict | None = None) -> list[str]:
+    """Long-prompt mixed workload at EQUAL HBM: worst-case up-front block
+    admission (PR 4) vs continuous chunked prefill with incremental
+    allocation (PR 5) over the SAME pool.
+
+    The up-front mode must reserve ``⌈(plen+max_new)/BS⌉`` blocks before a
+    sequence may start, so long prompts + long decodes cap concurrency at
+    ``NB / worst_case`` and park the reservation's decode tail unwritten
+    for the whole sequence lifetime.  The chunked mode admits on
+    first-chunk demand, takes blocks exactly at block-boundary crossings
+    (parking on the block semaphore's waiting array when the pool runs
+    dry), so live blocks track WRITTEN tokens — more concurrent sequences
+    per HBM byte, fewer engine rounds, higher pool utilization.  The
+    ISSUE acceptance: chunked ≥ up-front tokens/s AND higher mean pool
+    utilization at equal HBM (asserted)."""
+    from repro.serving.engine_state import (
+        make_chunked_prefill_token_fn,
+        make_paged_pool_model,
+        paged_pool_admit_fn,
+        paged_pool_token_fn,
+    )
+
+    NB, BS, MB = 64, 8, 26
+    S, K, CHUNK, BUDGET = 8, 16, 24, 96
+    d, vocab = 8, 50
+    n_req = 16 if _quick() else 24
+    rng = np.random.default_rng(9)
+    plens = rng.integers(40, 80, n_req)  # 5-10 blocks of prompt
+    mxs = rng.integers(64, 128, n_req)   # + a LONG decode tail (≤ MB·BS)
+    chunked_tok_fn = make_chunked_prefill_token_fn(CHUNK)
+
+    def make_reqs():
+        rng_p = np.random.default_rng(11)
+        return [Request(rid=i, prompt=list(rng_p.integers(1, vocab, plens[i])),
+                        max_new_tokens=int(mxs[i]), tenant_id="a")
+                for i in range(n_req)]
+
+    def drain(chunked: bool):
+        eng = ContinuousBatchingEngine(
+            lambda a: None, lambda r: None, S, tenants={"a": 1.0},
+            kv_pool=(NB, BS, MB), prompt_cap=128,
+            chunked_prefill=(CHUNK, BUDGET) if chunked else None)
+        eng.megastep_model = make_paged_pool_model(
+            jax.random.PRNGKey(0), vocab=vocab, d=d, num_blocks=NB,
+            block_size=BS)
+        tok_fn = chunked_tok_fn if chunked else paged_pool_token_fn
+        adm_fn = None if chunked else paged_pool_admit_fn
+        reqs = make_reqs()
+        eng.submit_batch(reqs)
+        utils = []
+        t0 = time.perf_counter()
+        while eng.stats.finished < n_req:
+            eng.megastep(K, token_fn=tok_fn, admit_fn=adm_fn)
+            utils.append(eng.telemetry()["pool_utilization"])
+        dt = time.perf_counter() - t0
+        # drop the drain tail (emptying pool) from the utilization mean
+        live = [u for u in utils if u > 0] or [0.0]
+        return eng, reqs, dt, sum(live) / len(live)
+
+    drain(False)  # warm the executables out of the timing
+    runs_u = [drain(False) for _ in range(3)]
+    drain(True)
+    runs_c = [drain(True) for _ in range(3)]
+    eng_u, reqs_u, dt_u, util_u = min(runs_u, key=lambda t: t[2])
+    eng_c, reqs_c, dt_c, util_c = min(runs_c, key=lambda t: t[2])
+    tokens = int(sum(len(r.out_tokens) for r in reqs_u))
+    assert tokens == sum(len(r.out_tokens) for r in reqs_c)
+    tps_u, tps_c = tokens / dt_u, tokens / dt_c
+    speedup = tps_c / tps_u
+    lines = ["", "== Continuous chunked prefill vs worst-case up-front "
+                 "(equal HBM) ==",
+             f"   pool {NB}×{BS} ({NB * BS} tokens), {S} slots, K={K}; "
+             f"prompts {plens.min()}–{plens.max()} tok + decode "
+             f"{mxs.min()}–{mxs.max()} tok; chunk={CHUNK}, "
+             f"budget={BUDGET}/round"]
+    lines.append(f"{'path':>10} {'tokens/s':>9} {'rounds':>7} "
+                 f"{'pool util':>10} {'stalls':>7} {'speedup':>8}")
+    lines.append(f"{'up-front':>10} {tps_u:>9.0f} {eng_u.stats.steps:>7} "
+                 f"{util_u:>9.1%} {'—':>7} {'1.0×':>8}")
+    lines.append(f"{'chunked':>10} {tps_c:>9.0f} {eng_c.stats.steps:>7} "
+                 f"{util_c:>9.1%} {eng_c.stats.kv_block_stalls:>7} "
+                 f"{speedup:>7.1f}×")
+    lines.append(f"→ incremental allocation keeps live blocks ∝ written "
+                 f"tokens: {util_c / max(util_u, 1e-9):.1f}× higher pool "
+                 f"utilization and {speedup:.1f}× tokens/s at equal HBM; "
+                 f"mid-sequence block stalls park on the waiting array "
+                 f"({eng_c.stats.kv_block_stalls} slot-rounds) instead of "
+                 f"deadlocking or over-reserving")
+    assert speedup >= (1.05 if _quick() else 1.15), \
+        f"chunked prefill only {speedup:.2f}× over up-front"
+    assert util_c > util_u, (util_c, util_u)
+    if metrics is not None:
+        metrics["chunked_prefill"] = {
+            "upfront": {"tok_s": round(tps_u, 1),
+                        "rounds": eng_u.stats.steps,
+                        "pool_util": round(util_u, 4)},
+            "chunked": {"tok_s": round(tps_c, 1),
+                        "rounds": eng_c.stats.steps,
+                        "pool_util": round(util_c, 4),
+                        "stalls": eng_c.stats.kv_block_stalls,
+                        "prefill_chunks": eng_c.stats.prefill_chunks},
+            "speedup": round(speedup, 2),
+            "util_ratio": round(util_c / max(util_u, 1e-9), 2),
+            "hbm_tokens": NB * BS,
+        }
+    return lines
+
+
 def run(metrics: dict | None = None) -> str:
     lines = ["== Serving scheduler: TWA buckets vs global rescan ==",
              f"{'backlog':>8} {'mode':>8} {'examined':>10} {'skipped':>10} {'wall s':>8}"]
@@ -373,6 +481,7 @@ def run(metrics: dict | None = None) -> str:
     lines.extend(run_qos_scaling(metrics))
     lines.extend(run_megastep(metrics))
     lines.extend(run_paged_pool(metrics))
+    lines.extend(run_longprompt(metrics))
     return "\n".join(lines)
 
 

@@ -34,6 +34,12 @@ in-graph models plug in via ``token_fn``/``admit_fn`` — see
 `engine_state.paged_attn_token_fn` for paged decode attention with
 in-graph prompt prefill.
 
+Continuous chunked prefill (``chunked_prefill=(chunk, budget)``): long
+prompts stream through the engine in per-round chunks with INCREMENTAL
+block allocation (admission on first-chunk demand, waiting-array parks on
+pool exhaustion) — see examples/serve_longprompt.py for the dedicated
+demo and serving/engine_state.py for the stall/park policy.
+
 Block-paged KV pool (``--paged``): the engine additionally owns a shared
 pool of KV blocks behind a TWA **block** semaphore
 (``kv_pool=(num_blocks, block_size)``): admission gates on BOTH a free
@@ -96,7 +102,17 @@ def main_paged(K: int = 16) -> None:
           f"{eng.stats.host_syncs} host syncs; peak {peak_live}/{NB} blocks "
           f"reserved, now free={tel['kv_blocks_free']} "
           f"live={tel['kv_blocks_live']}")
+    # chunked-prefill gauges ride along on every paged engine (all zero in
+    # worst-case up-front mode; see examples/serve_longprompt.py for them
+    # moving): pool_utilization = blocks actually holding tokens / pool,
+    # kv_block_stalls / parked_slots = waiting-array block parks,
+    # prefill_chunks = chunk writes
+    print(f"[paged] gauges: pool_utilization={tel['pool_utilization']:.0%} "
+          f"kv_block_stalls={tel['kv_block_stalls']} "
+          f"parked_slots={tel['parked_slots']} "
+          f"prefill_chunks={tel['prefill_chunks']}")
     assert tel["kv_blocks_free"] == NB and tel["kv_blocks_live"] == 0
+    assert tel["parked_slots"] == 0 and tel["pool_utilization"] == 0.0
     assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
     print("[example] block-paged KV pool admission + decode OK")
 

@@ -286,14 +286,15 @@ def qos_reclaim(state: QoSState, live_depth: jax.Array):
 
 
 def block_gate(admitted: jax.Array, demand: jax.Array, key: jax.Array,
-               free_blocks):
+               free_blocks, headroom=0, commit_demand=None, commit_free=0,
+               commit_bootstrap=False):
     """Second-resource admission gate: of the rows the QoS round admitted
     (each holding one SLOT unit), keep the longest FCFS prefix whose
-    cumulative worst-case **block** demand fits the free pool — the
-    batched form of taking ``demand_i`` units from the TWA block semaphore
-    in ticket order.  Strict FCFS: a row that does not fit blocks every
-    later row (no bypass — a stream of small sequences can never starve a
-    large one, exactly the paper's first-come-first-enabled order).
+    cumulative **block** demand fits the free pool — the batched form of
+    taking ``demand_i`` units from the TWA block semaphore in ticket
+    order.  Strict FCFS: a row that does not fit blocks every later row
+    (no bypass — a stream of small sequences can never starve a large
+    one, exactly the paper's first-come-first-enabled order).
 
     ``key`` is the global admission order (the engine's packed
     (clamped ticket distance, tenant index) sort key — see
@@ -301,6 +302,31 @@ def block_gate(admitted: jax.Array, demand: jax.Array, key: jax.Array,
     sentinel INT32_MAX.  Returns the granted mask; the caller refunds the
     QoS slot credit of ``admitted & ~granted`` rows (they stay live in the
     backlog and retry next round — "block-stalled").
+
+    ``headroom`` is the **reserved-headroom check** of the chunked-prefill
+    subsystem (incremental allocation): demands are then FIRST-CHUNK
+    demands, and the gate admits only into ``free − headroom``, where
+    headroom = :func:`block_headroom` over the running slots — the blocks
+    the safety-chain-earliest running sequences may still claim to
+    finish.  Admission can therefore never eat into the reserve that
+    keeps at least one runnable slot able to complete (the no-deadlock
+    invariant documented in `serving.engine_state`); the worst-case
+    up-front mode passes 0 (its demands are already whole-lifetime
+    reservations).
+
+    ``commit_demand``/``commit_free`` add the **commitment watermark**
+    (chunked mode): each candidate's whole-lifetime demand must also fit
+    the remaining commitment budget ``W − Σ rem(running)``.  Unlike the
+    up-front gate this is PIPELINED — remaining demand drains as running
+    sequences write, so reservations overlap in time — but it bounds
+    aggregate outstanding demand: an overcommitted pool degenerates into
+    the safety chain serializing the endgame (one funded slot at a time),
+    which costs more rounds than the extra residency buys (measured in
+    `benchmarks/serving_bench.run_longprompt`).  ``commit_bootstrap``
+    (the "pool is uncommitted" flag) exempts the FCFS-FIRST candidate
+    from the watermark so a request larger than W is still served — it
+    waits, strict no-bypass, until the pool drains, then runs alone
+    (no starvation; the submit-time check bounds it by the pool itself).
     """
     n = admitted.shape[0]
     demand = jnp.asarray(demand, jnp.int32)
@@ -308,10 +334,54 @@ def block_gate(admitted: jax.Array, demand: jax.Array, key: jax.Array,
                         stable=True)
     adm_s = admitted[order]
     cum = jnp.cumsum(jnp.where(adm_s, demand[order], 0))
-    fits = cum <= jnp.asarray(free_blocks, jnp.int32)
+    fits = cum <= (jnp.asarray(free_blocks, jnp.int32)
+                   - jnp.asarray(headroom, jnp.int32))
+    if commit_demand is not None:
+        cum2 = jnp.cumsum(jnp.where(adm_s,
+                                    jnp.asarray(commit_demand,
+                                                jnp.int32)[order], 0))
+        first = adm_s & (jnp.cumsum(adm_s.astype(jnp.int32)) == 1)
+        fits &= ((cum2 <= jnp.asarray(commit_free, jnp.int32))
+                 | (first & commit_bootstrap))
     blocked = jnp.cumsum((adm_s & ~fits).astype(jnp.int32)) > 0
     ok = adm_s & fits & ~blocked
     return jnp.zeros((n,), bool).at[order].set(ok)
+
+
+def block_headroom(rem: jax.Array, held: jax.Array, order: jax.Array,
+                   active: jax.Array) -> jax.Array:
+    """Reserved headroom of the incremental block allocator — the Banker
+    margin that makes mid-sequence stalls parks instead of deadlocks.
+
+    The chunked-prefill subsystem maintains, for live slots in priority
+    order (earliest admission first), the safety invariant
+
+        rem_i  ≤  free  +  Σ_{j<i} held_j        for every live slot i,
+
+    i.e. every slot's worst-case *remaining* block demand is covered by
+    the free pool plus everything its priority-predecessors will
+    eventually release.  Under it the priority-first slot can always take
+    (rem_1 ≤ free), so it never parks, finishes, and releases — the next
+    slot inherits the cover (rem_2 ≤ free + held_1), and by induction
+    every parked slot is resumed: a strict no-deadlock guarantee.
+
+    ``headroom = max(0, max_i(rem_i − Σ_{j<i} held_j))`` is the smallest
+    free-pool level that keeps the invariant; admission (`block_gate`) and
+    incremental takes (`serving.prefill.chunk_plan`) both refuse to let
+    ``free`` drop below it.  ``rem``/``held``: per-slot remaining demand /
+    blocks held; ``order``: the priority permutation (e.g.
+    `serving.prefill.banker_order` — earliest admission first); inactive
+    rows are ignored.  Returns an i32 scalar.
+    """
+    rem = jnp.asarray(rem, jnp.int32)
+    held = jnp.asarray(held, jnp.int32)
+    order = jnp.asarray(order, jnp.int32)
+    act_s = active[order]
+    held_s = jnp.where(act_s, held[order], 0)
+    cum_held = jnp.cumsum(held_s) - held_s
+    deficit = jnp.where(act_s, rem[order] - cum_held,
+                        jnp.iinfo(jnp.int32).min)
+    return jnp.maximum(jnp.max(deficit, initial=0), 0)
 
 
 # -- one fused admission round -------------------------------------------------

@@ -209,6 +209,48 @@ def pool_release(pool: BlockPool, ids: jax.Array, mask: jax.Array) -> BlockPool:
     return BlockPool(sema=post_batch(pool.sema, jnp.sum(vu)), free_q=free_q)
 
 
+def park_state(sema: SemaState, deficit: jax.Array):
+    """Waiting-array park registration for block waiters (the long-term wait
+    of the paper, at pool granularity): a waiter short ``deficit`` units
+    becomes runnable exactly when the grant cursor has advanced ``deficit``
+    more places, i.e. when ticket ``grant + deficit − 1`` is enabled.
+    Releases `post` and poke the buckets of the enabled range in order, so
+    that ticket's TWAHash bucket moves precisely when cumulative releases
+    reach the deficit — the waiter observes ``(bucket, seq)`` here and
+    re-examines only when the bucket's sequence moves (`woken_mask`).
+    Hash aliasing can wake early (the paper's benign spurious re-check);
+    a woken waiter whose re-check fails re-parks with a fresh deficit.
+    Returns ``(bucket (…,) i32, observed_seq (…,) u32)``."""
+    wake = sema.grant + jnp.asarray(deficit, jnp.uint32) - jnp.uint32(1)
+    bucket = bucket_index(sema, wake)
+    return bucket, sema.bucket_seq[bucket]
+
+
+def pool_try_alloc(pool: BlockPool, counts: jax.Array, max_per: int, *,
+                   park: jax.Array, deficit: jax.Array):
+    """Guarded batched take + waiting-array park — the incremental-allocation
+    entry point (`serving.prefill.chunk_plan` decides the counts).
+
+    ``counts`` rows take their blocks (a plain wrap-safe `pool_alloc`; the
+    caller's no-deadlock plan guarantees they fit), while rows flagged in
+    ``park`` register as block waiters instead of spinning on the free
+    count: each parked row records the `park_state` of its ``deficit`` —
+    the TWA bucket whose poke signals that enough releases have landed for
+    a re-check.  This is the paper's long-term wait transplanted to block
+    grants: a mid-sequence block stall costs one bucket observation, not a
+    per-round rescan of every stalled slot, and resumes flow FCFS because
+    releases enable tickets (and poke their buckets) strictly in cursor
+    order.  Returns ``(pool', ids (S, max_per), bucket (S,), seq (S,))``
+    — bucket/seq are meaningful only where ``park`` is set (0 elsewhere).
+    """
+    park = jnp.asarray(park, bool)
+    new_pool, ids = pool_alloc(pool, counts, max_per)
+    bucket, seq = park_state(pool.sema, jnp.maximum(jnp.asarray(deficit,
+                                                                jnp.int32), 1))
+    return (new_pool, ids, jnp.where(park, bucket, 0),
+            jnp.where(park, seq, jnp.uint32(0)))
+
+
 # -- vectorized multi-semaphore (one per expert / per resource class) ---------
 
 

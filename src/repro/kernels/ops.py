@@ -17,6 +17,7 @@ from ..core.functional import next_pow2 as _next_pow2
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention_fwd as _flash_attention_fwd
 from .paged_decode import paged_decode as _paged_decode
+from .paged_prefill import paged_prefill as _paged_prefill
 from .qos_admission import qos_round_fused as _qos_round_fused
 from .qos_admission import qos_round_scan as _qos_round_scan
 from .sema_batch import sema_batch as _sema_batch
@@ -45,6 +46,15 @@ def paged_decode(q, k_pool, v_pool, block_tbl, lens):
     `ref.paged_decode_ref`, bit-exact in interpret mode)."""
     return _paged_decode(q, k_pool, v_pool, block_tbl, lens,
                          interpret=_interpret())
+
+
+def paged_prefill(q, k_chunk, v_chunk, k_pool, v_pool, block_tbl, off, lens):
+    """Ragged blockwise flash-prefill of one chunked-prefill round: chunk
+    KV written into the slots' freshly-taken pool blocks in the same pass
+    (aliased pools), causal-within-chunk + full prior-block attention
+    (oracle: `ref.paged_prefill_ref`, bit-exact in interpret mode)."""
+    return _paged_prefill(q, k_chunk, v_chunk, k_pool, v_pool, block_tbl,
+                          off, lens, interpret=_interpret())
 
 
 def sema_batch(ticket, grant, bucket_seq, requests, post_n, salt, *, block_n=512):

@@ -230,6 +230,141 @@ def paged_decode_ref(q, k_pool, v_pool, block_tbl, lens):
     return o.reshape(S, KV, G, hd).reshape(S, H, hd)
 
 
+def paged_prefill_merge(chunk, tpos, off, length):
+    """Merge the chunk rows that land in one pool block — shared VERBATIM
+    by the Pallas kernel (`kernels/paged_prefill._prefill_kernel`) and the
+    blockwise oracle `paged_prefill_ref`, so bit-exactness pins the
+    writeback logic, not fp noise.
+
+    ``chunk``: (CT, hd) this slot's chunk K or V rows; ``tpos``: (BS,) i32
+    absolute token positions of the block rows; ``off``/``length``: chunk
+    start position / token count.  Block row t receives chunk row
+    ``tpos[t] − off`` iff it falls inside the chunk window.  The gather is
+    a 0/1 one-hot matmul — MXU-friendly on TPU and EXACT in f32 (each
+    output row is a single product with a 1.0) — instead of a dynamic
+    in-kernel gather.  Returns ``(sel (BS,) bool, upd (BS, hd))``."""
+    CT = chunk.shape[0]
+    sel = (tpos >= off) & (tpos < off + length)
+    c = tpos - off
+    onehot = ((c[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, CT), 1))
+              & sel[:, None]).astype(jnp.float32)
+    upd = jax.lax.dot_general(
+        onehot, chunk.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return sel, upd.astype(chunk.dtype)
+
+
+def flash_prefill_block(q, k, v, mask, m_prev, l_prev, acc_prev, *, scale):
+    """One online-softmax block step of blockwise flash-PREFILL — the 2-D
+    masked sibling of :func:`flash_decode_block` (per-query-row masks:
+    causal within the chunk, full attention to prior pool blocks), shared
+    VERBATIM by `kernels/paged_prefill` and `paged_prefill_ref`.
+
+    q: (Q, hd) chunk queries (GQA groups stacked row-major); k/v: (BS, hd);
+    mask: (Q, BS) bool; m/l: (Q, 1) f32 carries; acc: (Q, hd) f32."""
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale  # (Q, BS)
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return m_new, l_new, acc_new
+
+
+def paged_prefill_ref(q, k_chunk, v_chunk, k_pool, v_pool, block_tbl, off,
+                      lens):
+    """Blockwise oracle for the ragged chunked-prefill kernel
+    (`kernels/paged_prefill.paged_prefill` — bit-exact in interpret mode).
+
+    q: (S, CT, H, hd) chunk queries; k_chunk/v_chunk: (S, CT, KV, hd) the
+    chunk's new KV rows; k_pool/v_pool: (NB, BS, KV, hd); block_tbl:
+    (S, MB) i32 (-1 ⇒ unallocated); off: (S,) i32 chunk start positions
+    (= tokens already in the pool); lens: (S,) i32 chunk lengths (0 ⇒ slot
+    idle this round).  Token t of slot s lives at block
+    ``block_tbl[s, t // BS]`` offset ``t % BS``; blocks covering
+    ``[0, off+len)`` must be allocated (the incremental allocator's
+    invariant).
+
+    Returns ``(out (S, CT, H, hd), k_pool', v_pool')`` — chunk KV merged
+    into its freshly-taken blocks (`paged_prefill_merge`), and each chunk
+    query attending causally within the chunk and fully to all prior
+    tokens (`flash_prefill_block` over the block tables, same -1→0 clamp
+    and ``i·BS < off+len`` ragged skip as the kernel; `lax.map` rows keep
+    the kernel's unbatched dot shapes — see `paged_decode_ref` on why)."""
+    S, CT, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    MB = block_tbl.shape[1]
+    G = H // KV
+    R = S * KV
+    scale = 1.0 / math.sqrt(hd)
+    qr = (q.reshape(S, CT, KV, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(R, G * CT, hd))
+    kc = k_chunk.transpose(0, 2, 1, 3).reshape(R, CT, hd)
+    vc = v_chunk.transpose(0, 2, 1, 3).reshape(R, CT, hd)
+    kp = k_pool.transpose(2, 0, 1, 3)  # (KV, NB, BS, hd)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    tbl_r = jnp.repeat(jnp.asarray(block_tbl, jnp.int32), KV, axis=0)
+    off_r = jnp.repeat(jnp.asarray(off, jnp.int32), KV)
+    len_r = jnp.repeat(jnp.asarray(lens, jnp.int32), KV)
+    head = jnp.tile(jnp.arange(KV, dtype=jnp.int32), S)  # r = s·KV + h
+
+    rows_q = jax.lax.broadcasted_iota(jnp.int32, (G * CT, 1), 0) % CT
+
+    def row(args):
+        qrow, kcrow, vcrow, trow, o, ln, h = args
+        m = jnp.full((G * CT, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((G * CT, 1), jnp.float32)
+        acc = jnp.zeros((G * CT, hd), jnp.float32)
+        qpos = o + rows_q
+        qvalid = rows_q < ln
+
+        def body(carry, i):
+            m, l, acc, mk, mv = carry
+            b = jnp.maximum(trow[i], 0)          # the kernel's index-map clamp
+            tpos = i * BS + jnp.arange(BS, dtype=jnp.int32)
+            sel, ku = paged_prefill_merge(kcrow, tpos, o, ln)
+            _, vu = paged_prefill_merge(vcrow, tpos, o, ln)
+            kblk = jnp.where(sel[:, None], ku, kp[h, b])
+            vblk = jnp.where(sel[:, None], vu, vp[h, b])
+            mask = qvalid & (tpos[None, :] <= qpos)
+            m2, l2, acc2 = flash_prefill_block(
+                qrow, kblk, vblk, mask, m, l, acc, scale=scale)
+            upd = (i * BS < o + ln) & (ln > 0)   # the kernel's pl.when skip
+            wr = upd & (i * BS + BS > o)         # block overlaps the chunk
+            mk = mk.at[i].set(jnp.where(wr, kblk, mk[i]))
+            mv = mv.at[i].set(jnp.where(wr, vblk, mv[i]))
+            return (jnp.where(upd, m2, m), jnp.where(upd, l2, l),
+                    jnp.where(upd, acc2, acc), mk, mv), None
+
+        mk0 = jnp.zeros((MB, BS, hd), k_pool.dtype)
+        mv0 = jnp.zeros((MB, BS, hd), v_pool.dtype)
+        (m, l, acc, mk, mv), _ = jax.lax.scan(
+            body, (m, l, acc, mk0, mv0), jnp.arange(MB, dtype=jnp.int32))
+        wrote = ((jnp.arange(MB) * BS < o + ln) & (ln > 0)
+                 & (jnp.arange(MB) * BS + BS > o))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype), mk, mv, wrote
+
+    o_r, mk_r, mv_r, wrote_r = jax.lax.map(
+        row, (qr, kc, vc, tbl_r, off_r, len_r, head))
+    out = (o_r.reshape(S, KV, G, CT, hd).transpose(0, 3, 1, 2, 4)
+           .reshape(S, CT, H, hd))
+    # scatter the merged chunk blocks back into the pools (the kernel's
+    # aliased writeback): only overlapping blocks of live rows write
+    bsel = jnp.where(wrote_r & (tbl_r >= 0), tbl_r, NB)  # (R, MB)
+    hsel = jnp.broadcast_to(head[:, None], bsel.shape)
+    kp2 = kp.at[hsel, bsel].set(mk_r, mode="drop")
+    vp2 = vp.at[hsel, bsel].set(mv_r, mode="drop")
+    return out, kp2.transpose(1, 2, 0, 3), vp2.transpose(1, 2, 0, 3)
+
+
 def paged_gather_kv(pool, block_tbl, lens):
     """Dense view of a paged cache: gather ``(S, MB·BS, KV, hd)`` plus the
     per-token position array (`decode_attention_ref` conventions, -1 ⇒

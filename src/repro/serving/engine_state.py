@@ -74,6 +74,44 @@ semaphore a second time at block granularity (`core.functional.BlockPool`):
     block-ordinal → pool block id; `kernels/paged_decode` streams
     attention over exactly the live blocks (bytes ∝ live tokens, not
     ∝ S·C as with the dense rings).
+
+Continuous chunked prefill (incremental allocation + the stall/park policy)
+---------------------------------------------------------------------------
+
+With ``chunk > 0`` (engine: ``chunked_prefill=(chunk, budget)``), the
+worst-case up-front reservation is replaced by **incremental** block
+acquisition (`serving.prefill`):
+
+  * admission gates on *first-chunk* demand only; each engine round
+    co-schedules prompt chunks with decode under the per-round prefill
+    token ``budget`` (Sarathi-style — long prompts stream through without
+    monopolizing rounds, decode is never throttled);
+  * a sequence takes blocks exactly when it crosses a block boundary —
+    prefill chunks take ``⌈(pos+ct)/BS⌉ − held``, decode takes one block
+    when its write cursor hits its capacity;
+  * **stall policy**: on pool exhaustion the slot PARKS on the block
+    semaphore's waiting array (`core.functional.pool_try_alloc`): it
+    records the TWAHash bucket of the future grant value that would make
+    it runnable and is re-examined only when a release pokes that bucket
+    (`core.functional.park_state`) — block-parked slots cost no per-round
+    rescan, and resume FCFS because releases enable tickets in cursor
+    order.  A parked slot neither prefills nor decodes; preemption and
+    completion release its blocks exactly like a running slot's.
+
+  **Headroom invariant (no deadlock).**  For live slots in Banker
+  priority order (admission round, FCFS key — `prefill.banker_order`),
+  every take and every admission preserves
+
+      rem_i  ≤  free  +  Σ_{j<i} held_j          for all live i,
+
+  i.e. each slot's worst-case remaining demand is covered by the free
+  pool plus what its priority-predecessors will release.  The
+  priority-first slot therefore never parks; it finishes, releases, and
+  hands the cover down — every parked slot is eventually resumed.
+  Admission enforces it via the reserved-headroom check in
+  `admission.functional_qos.block_gate` (+ `block_headroom`), takes via
+  the margin scan in `serving.prefill.chunk_plan`, and the submit-time
+  ``demand ≤ pool`` ValueError closes the induction for newcomers.
 """
 
 from __future__ import annotations
@@ -84,7 +122,12 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..admission.functional_qos import QoSState, block_gate, qos_scan_round
+from ..admission.functional_qos import (
+    QoSState,
+    block_gate,
+    block_headroom,
+    qos_scan_round,
+)
 from ..core.functional import (
     BlockPool,
     SemaState,
@@ -94,9 +137,17 @@ from ..core.functional import (
     pool_alloc,
     pool_free_count,
     pool_release,
+    pool_try_alloc,
     post_batch,
     segment_counts,
     take_batch,
+)
+from .prefill import (
+    banker_order,
+    cdiv,
+    chunk_plan,
+    first_chunk_demand,
+    total_block_demand,
 )
 
 # admission-order sort key packs (clamped ticket distance, tenant index)
@@ -134,6 +185,15 @@ class Slots(NamedTuple):
     emitted: jax.Array   # (S,) i32 — tokens emitted so far
     token: jax.Array     # (S,) i32 — last token (next decode input)
     pos: jax.Array       # (S,) i32 — KV write cursor / absolute position
+    # -- continuous chunked prefill (serving.prefill; inert when chunk=0) --
+    plen: jax.Array      # (S,) i32 — prompt length (pos < plen ⇒ prefilling)
+    prompt: jax.Array    # (S, P) i32 — the slot's prompt (chunk reads)
+    prio_r: jax.Array    # (S,) i32 — admission round (Banker order, primary)
+    prio_k: jax.Array    # (S,) i32 — packed FCFS admission key (secondary)
+    parked: jax.Array    # (S,) bool — block-stalled on the waiting array
+    park_bucket: jax.Array  # (S,) i32 — observed TWAHash bucket (park_state)
+    park_seq: jax.Array     # (S,) u32 — bucket sequence at park time
+    chunk: jax.Array     # (S,) i32 — prefill tokens scheduled THIS round
 
 
 class KVPool(NamedTuple):
@@ -155,6 +215,8 @@ class EngineState(NamedTuple):
     backlog: Backlog
     slots: Slots
     kv: Optional[KVPool] = None  # block-paged KV pool (None = dense rings)
+    stalls: Optional[jax.Array] = None  # i32 — cumulative parked slot-rounds
+    chunks: Optional[jax.Array] = None  # i32 — cumulative prefill chunks
 
 
 class RoundOut(NamedTuple):
@@ -200,6 +262,8 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
         slot_sema=make_sema(count=n_slots, table_size=slot_table),
         free=jnp.asarray(free_units, jnp.int32),
         round_no=jnp.zeros((), jnp.int32),
+        stalls=jnp.zeros((), jnp.int32),
+        chunks=jnp.zeros((), jnp.int32),
         backlog=Backlog(
             valid=jnp.zeros((B,), bool), tenant=zb,
             ticket=jnp.zeros((B,), jnp.uint32),
@@ -218,7 +282,15 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
             max_new=jnp.zeros((S,), jnp.int32),
             emitted=jnp.zeros((S,), jnp.int32),
             token=jnp.zeros((S,), jnp.int32),
-            pos=jnp.zeros((S,), jnp.int32)),
+            pos=jnp.zeros((S,), jnp.int32),
+            plen=jnp.zeros((S,), jnp.int32),
+            prompt=jnp.zeros((S, P), jnp.int32),
+            prio_r=jnp.zeros((S,), jnp.int32),
+            prio_k=jnp.zeros((S,), jnp.int32),
+            parked=jnp.zeros((S,), bool),
+            park_bucket=jnp.zeros((S,), jnp.int32),
+            park_seq=jnp.zeros((S,), jnp.uint32),
+            chunk=jnp.zeros((S,), jnp.int32)),
     )
 
 
@@ -239,18 +311,76 @@ def _fcfs_key(backlog: Backlog, grant: jax.Array, mask: jax.Array):
 def _block_demand(backlog: Backlog, block_size: int) -> jax.Array:
     """Worst-case block demand per backlog row: every token the sequence
     can ever hold (truncated prompt + max_new) — acquired in full at
-    admission, so decode can never stall mid-sequence."""
-    return jnp.maximum(
-        (backlog.prompt_len + backlog.max_new + block_size - 1) // block_size,
-        1)
+    admission in up-front mode; the commitment watermark's per-row demand
+    in chunked mode."""
+    return total_block_demand(backlog.prompt_len, backlog.max_new,
+                              block_size)
 
 
-def _assign_slots(state: EngineState, admitted: jax.Array):
+def _slot_rem(sl: Slots, held: jax.Array, block_size: int) -> jax.Array:
+    """Worst-case REMAINING block demand per slot (the safety invariant's
+    ``rem``): whole-lifetime demand minus the blocks already held; 0 for
+    idle slots."""
+    total = total_block_demand(sl.plen, sl.max_new, block_size)
+    return jnp.where(sl.busy, total - held, 0)
+
+
+def _chunk_phase(state: EngineState, chunk: int, budget: int,
+                 block_size: int):
+    """The chunked-prefill slice of one engine round: plan this round's
+    chunks/takes/parks (`serving.prefill.chunk_plan` over the Banker
+    order), take the granted blocks from the TWA block semaphore
+    (`core.functional.pool_try_alloc` — parked slots register on the
+    waiting array instead), scatter the fresh ids into the slot tables,
+    and stage the per-slot chunk lengths for ``token_fn``.  Returns
+    ``(state', emit)`` — the decode mask of this round."""
+    sl, kv = state.slots, state.kv
+    S, MB = kv.tbl.shape
+    held = jnp.sum((kv.tbl >= 0).astype(jnp.int32), axis=1)
+    # TWA wake gate: parked slots re-attempt only when a release poked
+    # their observed bucket (spurious wakes from hash aliasing are benign
+    # re-checks; a missed state change is impossible — free−guard grows
+    # only via releases, and every release pokes the enabled range).
+    woken = kv.pool.sema.bucket_seq[sl.park_bucket] != sl.park_seq
+    order = banker_order(_slot_rem(sl, held, block_size), sl.prio_r,
+                         sl.prio_k, sl.busy)
+    plan = chunk_plan(order, sl.busy, sl.parked, woken, sl.pos, sl.plen,
+                      sl.max_new, held, pool_free_count(kv.pool),
+                      chunk=chunk, budget=budget, block_size=block_size)
+    newly = plan.parked & (plan.deficit > 0)
+    max_take = cdiv(chunk, block_size) + 1  # a chunk can straddle a block
+    pool, ids, bkt, seq = pool_try_alloc(kv.pool, plan.take, max_take,
+                                         park=newly, deficit=plan.deficit)
+    k = jnp.arange(max_take, dtype=jnp.int32)
+    rowi = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[:, None],
+                            (S, max_take))
+    valid = k[None, :] < plan.take[:, None]
+    tbl = kv.tbl.at[jnp.where(valid, rowi, S),
+                    held[:, None] + k[None, :]].set(ids, mode="drop")
+    sl = sl._replace(
+        chunk=plan.tokens, parked=plan.parked,
+        park_bucket=jnp.where(newly, bkt, sl.park_bucket),
+        park_seq=jnp.where(newly, seq, sl.park_seq))
+    state = state._replace(
+        kv=KVPool(pool=pool, tbl=tbl), slots=sl,
+        stalls=state.stalls + jnp.sum(plan.parked.astype(jnp.int32)),
+        chunks=state.chunks + jnp.sum((plan.tokens > 0).astype(jnp.int32)))
+    return state, plan.emit
+
+
+def _assign_slots(state: EngineState, admitted: jax.Array,
+                  chunked: bool = False):
     """Map admitted backlog rows to free slots: rows in wrap-safe per-tenant
     FCFS admission order (signed ticket distance from the post-round grant
     frontier, tenant index tiebreak — the in-graph `_fcfs_sort`) take
     ascending free slot indices, gated through the free-slot TWA semaphore
-    (admissions `take`; the QoS invariant guarantees n_admitted ≤ free)."""
+    (admissions `take`; the QoS invariant guarantees n_admitted ≤ free).
+
+    Every slot records its Banker priority — (admission round, FCFS key) —
+    at assignment; ``chunked`` starts the KV cursor at 0 (the prompt is
+    prefilled chunk-by-chunk) instead of at ``prompt_len`` (instant
+    prefill) and copies the prompt into the slot row so later chunks can
+    read it after the backlog row is recycled."""
     sl, bl = state.slots, state.backlog
     S = sl.busy.shape[0]
     B = bl.valid.shape[0]
@@ -267,6 +397,7 @@ def _assign_slots(state: EngineState, admitted: jax.Array):
 
     slot_sema, _, _, _ = take_batch(state.slot_sema, assign)
     seed_tok = bl.prompt[rows, jnp.maximum(bl.prompt_len[rows] - 1, 0)]
+    pos0 = jnp.zeros_like(rows) if chunked else bl.prompt_len[rows]
     slots = Slots(
         busy=sl.busy.at[tgt].set(True, mode="drop"),
         row=sl.row.at[tgt].set(rows, mode="drop"),
@@ -276,7 +407,15 @@ def _assign_slots(state: EngineState, admitted: jax.Array):
         max_new=sl.max_new.at[tgt].set(bl.max_new[rows], mode="drop"),
         emitted=sl.emitted.at[tgt].set(0, mode="drop"),
         token=sl.token.at[tgt].set(seed_tok, mode="drop"),
-        pos=sl.pos.at[tgt].set(bl.prompt_len[rows], mode="drop"))
+        pos=sl.pos.at[tgt].set(pos0, mode="drop"),
+        plen=sl.plen.at[tgt].set(bl.prompt_len[rows], mode="drop"),
+        prompt=sl.prompt.at[tgt].set(bl.prompt[rows], mode="drop"),
+        prio_r=sl.prio_r.at[tgt].set(state.round_no, mode="drop"),
+        prio_k=sl.prio_k.at[tgt].set(key[rows], mode="drop"),
+        parked=sl.parked.at[tgt].set(False, mode="drop"),
+        park_bucket=sl.park_bucket.at[tgt].set(0, mode="drop"),
+        park_seq=sl.park_seq.at[tgt].set(jnp.uint32(0), mode="drop"),
+        chunk=sl.chunk.at[tgt].set(0, mode="drop"))
     bslot = bl.slot.at[jnp.where(assign, rows, B)].set(tgt, mode="drop")
     return state._replace(slots=slots, slot_sema=slot_sema,
                           backlog=bl._replace(slot=bslot)), rows, assign, tgt
@@ -284,7 +423,8 @@ def _assign_slots(state: EngineState, admitted: jax.Array):
 
 def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
                  admit_fn: AdmitFn = None, admit_impl=None,
-                 block_size: int = 0):
+                 block_size: int = 0, chunk: int = 0, budget: int = 0,
+                 commit: int = 0):
     """One fused engine iteration — the pure-functional `step()`.
 
     ``admit_impl`` overrides the admission-round implementation (signature
@@ -295,9 +435,22 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     With ``state.kv`` set (block-paged KV pool), ``block_size`` must be the
     static pool block size: admission additionally gates on worst-case
     block demand (see the module docstring's block-semaphore mapping).
+
+    ``chunk > 0`` selects **continuous chunked prefill** (requires the
+    pool): admission gates on first-chunk demand behind the reserved
+    headroom AND the ``commit``-block commitment watermark, prompts
+    prefill ``chunk`` tokens per round under the per-round prefill token
+    ``budget``, blocks are taken incrementally at block-boundary
+    crossings, and block-stalled slots park on the block semaphore's
+    waiting array (module docstring; `serving.prefill`).  ``token_fn``
+    must then handle the prefill phase — see
+    :func:`chunked_prefill_token_fn`.
     """
     paged = state.kv is not None
     assert not paged or block_size > 0, "paged pool needs block_size"
+    chunked = chunk > 0
+    assert not chunked or (paged and budget > 0), \
+        "chunked prefill needs the block pool and a positive token budget"
     sl, bl = state.slots, state.backlog
     S = sl.busy.shape[0]
     now = jnp.asarray(now, jnp.float32)
@@ -308,7 +461,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     n_pre = jnp.sum(pre.astype(jnp.int32))
     prerow = jnp.where(pre, sl.row, -1)
     sl = sl._replace(busy=sl.busy & ~pre,
-                     row=jnp.where(pre, -1, sl.row))
+                     row=jnp.where(pre, -1, sl.row),
+                     parked=sl.parked & ~pre)
     state = state._replace(slots=sl, slot_sema=post_batch(state.slot_sema, n_pre))
     if paged:
         # preempted slots' blocks post back BEFORE admission — they feed
@@ -343,19 +497,42 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
         jnp.any(alive), _round, _skip, (state.qos, state.free))
 
     # (2b) multi-resource gate: of the QoS-admitted rows, only the FCFS
-    # prefix whose cumulative worst-case block demand fits the free pool
-    # is granted; block-stalled rows refund their tenant's slot credit
-    # and stay live in the backlog (they retry every round).  Cond-skipped
-    # when the QoS round admitted nothing (gate/refund are identities on
-    # an empty mask — the host path's ``admitted.any()`` early-out).
+    # prefix whose cumulative block demand fits the free pool is granted;
+    # block-stalled rows refund their tenant's slot credit and stay live
+    # in the backlog (they retry every round).  Cond-skipped when the QoS
+    # round admitted nothing (gate/refund are identities on an empty mask
+    # — the host path's ``admitted.any()`` early-out).  Chunked prefill
+    # gates on FIRST-CHUNK demand only, behind the reserved headroom that
+    # keeps the no-deadlock invariant (module docstring).
     if paged:
-        demand = _block_demand(bl, block_size)
+        if chunked:
+            demand = first_chunk_demand(bl.prompt_len, chunk, block_size)
+            held = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32), axis=1)
+            rem = _slot_rem(state.slots, held, block_size)
+            headroom = block_headroom(
+                rem, held,
+                banker_order(rem, state.slots.prio_r, state.slots.prio_k,
+                             state.slots.busy),
+                state.slots.busy)
+            # commitment watermark: lifetime demand admits only into the
+            # UNCOMMITTED budget (pipelined, unlike up-front — see
+            # block_gate); the bootstrap flag keeps over-watermark
+            # requests servable (alone, strict FCFS)
+            commit_demand = _block_demand(bl, block_size)
+            total_rem = jnp.sum(rem)
+            commit_free = commit - total_rem
+            bootstrap = total_rem == 0
+        else:
+            demand = _block_demand(bl, block_size)
+            headroom = jnp.int32(0)
+            commit_demand, commit_free, bootstrap = None, 0, False
 
         def _gate(args):
             qos, admitted = args
             granted = block_gate(admitted, demand,
                                  _fcfs_key(bl, qos.grant, admitted),
-                                 pool_free_count(state.kv.pool))
+                                 pool_free_count(state.kv.pool), headroom,
+                                 commit_demand, commit_free, bootstrap)
             stalled = admitted & ~granted
             return qos._replace(consumed=qos.consumed - segment_counts(
                 bl.tenant, stalled, qos.ticket.shape[0])), granted
@@ -370,8 +547,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     state = state._replace(qos=qos, backlog=bl)
 
     # (3) slot assignment (FCFS → ascending free slots)
-    state, rows, assign, tgt = _assign_slots(state, admitted)
-    if paged:
+    state, rows, assign, tgt = _assign_slots(state, admitted, chunked)
+    if paged and not chunked:
         # wrap-safe semaphore take of each granted slot's demand: ids pop
         # off the circular free queue at the ticket cursor in slot order
         # (cond-skipped when nothing was assigned — alloc of 0 is identity)
@@ -384,21 +561,32 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 
         state = state._replace(kv=jax.lax.cond(
             jnp.any(assign), _alloc, lambda kv: kv, state.kv))
+
+    # (3b) chunked prefill: plan chunks/budget, take blocks incrementally
+    # (newly admitted slots request their FIRST chunk right here — the
+    # blocks the gate's headroom check just promised), park the stalled.
+    if chunked:
+        state, emit = _chunk_phase(state, chunk, budget, block_size)
     if admit_fn is not None:  # in-graph prefill for newly admitted slots
         model = admit_fn(model, state, rows, assign, tgt)
 
-    # (4) decode + sample every busy slot (including this round's admits —
-    # the host engine prefills then decodes admitted rows the same step)
+    # (4) decode + sample every decode-ready slot (including this round's
+    # admits in up-front mode — the host engine prefills then decodes
+    # admitted rows the same step; in chunked mode a slot decodes from the
+    # round AFTER its prefill completes, and parked slots skip the round)
     sl = state.slots
-    emit = sl.busy
+    if not chunked:
+        emit = sl.busy
     toks, model = token_fn(model, state)
     toks = jnp.where(emit, jnp.asarray(toks, jnp.int32), sl.token)
+    adv = emit.astype(jnp.int32) + (sl.chunk if chunked else 0)
     sl = sl._replace(token=toks,
                      emitted=sl.emitted + emit.astype(jnp.int32),
-                     pos=sl.pos + emit.astype(jnp.int32))
+                     pos=sl.pos + adv)
 
     # (5) completion: done slots post back; their units bank for the NEXT
     # round (the host engine's `_qos_free` in kernel mode)
+    n_busy = jnp.sum(sl.busy.astype(jnp.int32))
     fin = sl.busy & (sl.emitted >= sl.max_new)
     n_fin = jnp.sum(fin.astype(jnp.int32))
     finrow = sl.row
@@ -417,23 +605,31 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     ys = RoundOut(tokens=toks, emit=emit, fin=fin, pre=pre, row=finrow,
                   prerow=prerow,
                   n_live=jnp.sum(alive.astype(jnp.int32)),
-                  n_active=jnp.sum(emit.astype(jnp.int32)))
+                  # busy (not emit): chunked rounds that only prefill or
+                  # park still count as engine activity, mirroring the
+                  # host loop's "active dict non-empty" accounting (in the
+                  # up-front modes emit == busy, so nothing changes)
+                  n_active=n_busy)
     return state, model, ys
 
 
 def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
                   admit_fn: AdmitFn = None, admit_impl=None,
-                  block_size: int = 0):
+                  block_size: int = 0, chunk: int = 0, budget: int = 0,
+                  commit: int = 0):
     """K fused engine rounds as one `lax.scan` — K host round-trips become
     one launch + one drain.  ``nows``: (K,) f32 epoch-relative timestamps
     (the host projects them at launch; in-graph time never advances on its
-    own).  Returns ``(state', model', RoundOut-of-(K, S) arrays)``."""
+    own).  With ``chunk > 0`` every scanned round co-schedules chunked
+    prefill with decode (zero extra host syncs for long prompts).
+    Returns ``(state', model', RoundOut-of-(K, S) arrays)``."""
 
     def body(carry, now):
         st, m = carry
         st, m, ys = engine_round(st, m, now, token_fn=token_fn,
                                  admit_fn=admit_fn, admit_impl=admit_impl,
-                                 block_size=block_size)
+                                 block_size=block_size, chunk=chunk,
+                                 budget=budget, commit=commit)
         return (st, m), ys
 
     (state, model), ys = jax.lax.scan(body, (state, model), nows)
@@ -441,17 +637,20 @@ def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
 
 
 @functools.partial(jax.jit, static_argnames=("token_fn", "admit_fn",
-                                             "admit_impl", "block_size"),
+                                             "admit_impl", "block_size",
+                                             "chunk", "budget", "commit"),
                    donate_argnums=(0, 1))
 def megastep_jit(state: EngineState, model, nows, *, token_fn: TokenFn,
                  admit_fn: AdmitFn = None, admit_impl=None,
-                 block_size: int = 0):
+                 block_size: int = 0, chunk: int = 0, budget: int = 0,
+                 commit: int = 0):
     """Donated-jit entry: the EngineState and model pytrees are donated, so
     steady-state serving re-uses their device buffers across megasteps
     instead of reallocating per launch."""
     return megastep_scan(state, model, nows, token_fn=token_fn,
                          admit_fn=admit_fn, admit_impl=admit_impl,
-                         block_size=block_size)
+                         block_size=block_size, chunk=chunk, budget=budget,
+                         commit=commit)
 
 
 def fused_round_impl(state, tenant_ids, tickets, alive, deadlines, now,
@@ -597,6 +796,85 @@ def paged_pool_token_fn(model, state: EngineState):
     vd, _ = paged_gather_kv(vp, kv.tbl, lens)
     o = decode_attention_ref(cur[:, None, :], kd, vd, kpos,
                              jnp.maximum(lens - 1, 0))  # (S, 1, d)
+    logits = (o[:, 0] @ model["wo"]) @ model["emb"].T
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return toks, {**model, "kp": kp, "vp": vp}
+
+
+def make_chunked_prefill_token_fn(chunk: int):
+    """Factory: a `chunked_prefill_token_fn` whose chunk-scatter window is
+    the STATIC chunk size instead of the whole prompt width — at most
+    ``chunk`` prompt tokens can move per round, so the masked gather/
+    scatter shrinks from (S, P) to (S, chunk) (~P/chunk× less per-round
+    prefill-write work for long prompts).  ``chunk`` must be ≥ the
+    engine's configured chunk size (a narrower window would silently
+    drop the tail of every scheduled chunk) — the scheduler validates
+    this via the ``_chunk_window`` attribute stamped here.  Create ONCE
+    per engine and reuse — the returned closure's identity keys the
+    megastep jit cache."""
+    def token_fn(model, state):
+        return _chunked_prefill_step(model, state, chunk)
+    token_fn._chunk_window = chunk
+    return token_fn
+
+
+def chunked_prefill_token_fn(model, state: EngineState):
+    """Continuous chunked prefill over the SHARED block pool — the in-scan
+    path that lets ``megastep(K)`` serve prompts far longer than the
+    one-shot prefill table with ZERO extra host syncs: each scanned round
+    writes this round's prompt chunks (``slots.chunk`` tokens starting at
+    the slot's KV cursor, planned by `serving.prefill.chunk_plan` into the
+    blocks the round just took) and decodes every decode-ready slot —
+    prefill and decode co-scheduled in ONE model call per round.
+
+    Uses `make_paged_pool_model` state.  The chunk scatter is masked over
+    the slot prompt width (shape-stable for any chunk size; use
+    :func:`make_chunked_prefill_token_fn` to shrink the window to the
+    engine's static chunk); the Pallas path for real models — blockwise
+    flash-prefill with causal chunk attention and in-pass KV writeback —
+    is `kernels/paged_prefill` (oracle-bit-exact standalone; see
+    tests/test_paged_prefill.py).  Decode math is identical to
+    `paged_pool_token_fn`, so token streams are bit-identical to one-shot
+    prefill for ANY chunk size (property-tested in
+    tests/test_chunked_prefill.py)."""
+    return _chunked_prefill_step(model, state, state.slots.prompt.shape[1])
+
+
+def _chunked_prefill_step(model, state: EngineState, window: int):
+    from ..kernels.ref import decode_attention_ref, paged_gather_kv
+
+    sl = state.slots
+    kv = state.kv
+    NB, BS = model["kp"].shape[:2]
+    S, MB = kv.tbl.shape
+    P = sl.prompt.shape[1]
+    W = min(window, P)
+    # ---- prefill: scatter this round's chunk embeddings into the pool
+    j = sl.pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]   # (S, W)
+    valid = jnp.arange(W, dtype=jnp.int32)[None, :] < sl.chunk[:, None]
+    ptok = jnp.take_along_axis(sl.prompt, jnp.clip(j, 0, P - 1), axis=1)
+    pe = model["emb"][ptok]                                         # (S, W, d)
+    bid = jnp.take_along_axis(kv.tbl, jnp.clip(j // BS, 0, MB - 1), axis=1)
+    ok = valid & (bid >= 0)
+    bsel = jnp.where(ok, bid, NB)                 # out-of-range → dropped
+    kp = model["kp"].at[bsel, j % BS, 0].set(pe, mode="drop")
+    vp = model["vp"].at[bsel, j % BS, 0].set(pe, mode="drop")
+    # ---- decode: `paged_pool_token_fn` math, decode-ready slots only
+    # (prefilling and block-parked slots are masked; the engine's emit
+    # mask drops their garbage samples the same way)
+    ready = sl.busy & (sl.pos >= sl.plen)
+    cur = model["emb"][sl.token]                                    # (S, d)
+    rows_i = jnp.arange(S, dtype=jnp.int32)
+    dbid = kv.tbl[rows_i, jnp.clip(sl.pos // BS, 0, MB - 1)]
+    wr = ready & (dbid >= 0)
+    dbsel = jnp.where(wr, dbid, NB)
+    kp = kp.at[dbsel, sl.pos % BS, 0].set(cur, mode="drop")
+    vp = vp.at[dbsel, sl.pos % BS, 0].set(cur, mode="drop")
+    lens = jnp.where(wr, sl.pos + 1, 0)
+    kd, kpos = paged_gather_kv(kp, kv.tbl, lens)
+    vd, _ = paged_gather_kv(vp, kv.tbl, lens)
+    o = decode_attention_ref(cur[:, None, :], kd, vd, kpos,
+                             jnp.maximum(lens - 1, 0))              # (S, 1, d)
     logits = (o[:, 0] @ model["wo"]) @ model["emb"].T
     toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return toks, {**model, "kp": kp, "vp": vp}

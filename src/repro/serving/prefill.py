@@ -1,0 +1,236 @@
+"""Continuous chunked prefill — incremental block allocation on the TWA
+block semaphore, planned by one fused priority scan.
+
+PR 4's pool admits on *worst-case* block demand: a sequence reserves
+``⌈(prompt_len + max_new)/BS⌉`` blocks up front, so long prompts lock out
+the pool long before they have written a single token, and a prompt that
+does not fit the per-slot table cannot be served at all.  This module is
+the paper's move applied one more time: just as TWA turns the ticket
+lock's global spin into bounded waiting-array waits, a mid-sequence block
+shortage becomes a **parked slot on the block semaphore's waiting array**
+(`core.functional.pool_try_alloc` / `park_state`) instead of an
+admission-time over-reservation.  Blocks are acquired exactly when a
+sequence crosses a block boundary:
+
+  * admission gates on **first-chunk demand only**
+    (:func:`first_chunk_demand` through `functional_qos.block_gate`);
+  * every engine round co-schedules prompt chunks with decode,
+    Sarathi-style, under a per-round prefill **token budget**
+    (:func:`chunk_plan`) — long prompts stream through the engine without
+    ever monopolizing a round;
+  * on pool exhaustion a slot **parks**: it observes the TWAHash bucket of
+    the future grant value that would make it runnable and is re-examined
+    only when a release pokes that bucket (`core.functional.park_state`)
+    — resumed FCFS, because releases enable tickets in cursor order.
+
+No-deadlock invariant (the reserved-headroom check)
+---------------------------------------------------
+
+Incremental allocation can deadlock: if every running slot parks waiting
+for blocks only other parked slots would release, nobody finishes.  The
+planner prevents it with a Banker-style safety invariant over the slots
+in **safety-chain order** (ascending remaining demand — nearest
+completion first, admission order as tiebreak; :func:`banker_order`
+derives why this order needs the least reserve):
+
+    rem_i  ≤  free  +  Σ_{j<i} held_j       for every live slot i,   (I)
+
+where ``rem_i`` is slot i's worst-case remaining block demand and
+``held_j`` the blocks j already holds.  (I) says: even if no new blocks
+ever appear, slot i can finish once its priority-predecessors finish and
+release.  The priority-first slot can then always take (rem₁ ≤ free), so
+it never parks; it finishes, releases, and hands the cover down — every
+parked slot is eventually resumed, strictly FCFS.
+
+(I) is maintained at both places blocks leave the pool:
+
+  * **admission** — `functional_qos.block_gate` admits first chunks only
+    into ``free − headroom`` where ``headroom = max(0, max_i(rem_i −
+    Σ_{j<i} held_j))`` (`functional_qos.block_headroom`): a newcomer
+    (appended last in priority order, its own (I) condition being
+    ``demand ≤ NB`` — enforced at submit) can never eat the reserve;
+  * **every incremental take** — :func:`chunk_plan` grants a take by slot
+    s only while every earlier-priority slot's margin survives it; the
+    margin recurrence (min over prefix of ``free + Σheld + Σtake + take_j
+    − rem_j``) is exactly (I) rewritten so one `lax.scan` over the S
+    sorted slots decides all takes, the budget split, and the park set in
+    a single pass.
+
+The planner is pure JAX and is THE single source of truth for all three
+engine paths: `serving.engine_state.engine_round` calls it inside the
+scanned megastep, and the host `ContinuousBatchingEngine.step()` (both
+QoS modes) calls the same jitted function on its per-request state — the
+paths stay bit-identical by construction (property-tested in
+tests/test_chunked_prefill.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def cdiv(a, b: int):
+    return (a + b - 1) // b
+
+
+def first_chunk_demand(prompt_len, chunk: int, block_size: int):
+    """Blocks the FIRST prefill chunk of a prompt needs — what chunked
+    admission gates on (vs the worst-case ``⌈(plen+max_new)/BS⌉`` of the
+    up-front mode): ``⌈min(chunk, plen)/BS⌉``, at least one block."""
+    return jnp.maximum(cdiv(jnp.minimum(jnp.asarray(prompt_len, jnp.int32),
+                                        chunk), block_size), 1)
+
+
+def total_block_demand(prompt_len, max_new, block_size: int):
+    """Worst-case whole-lifetime block demand of a sequence (every token it
+    can ever hold) — the ``rem + held`` bound the safety invariant tracks."""
+    return jnp.maximum(cdiv(jnp.asarray(prompt_len, jnp.int32)
+                            + jnp.asarray(max_new, jnp.int32), block_size), 1)
+
+
+def banker_order(rem: jax.Array, prio_round: jax.Array, prio_key: jax.Array,
+                 active: jax.Array) -> jax.Array:
+    """The canonical safety-chain permutation: ascending (remaining
+    worst-case demand, admission round, packed FCFS admission key, slot
+    index), inactive rows last — **nearest-completion first**.
+
+    For a single resource type this is Banker's optimal order: if ANY
+    completion order satisfies the chain condition ``rem_i ≤ free +
+    Σ_{j<i} held_j``, the ascending-remaining order does (exchange
+    argument — swapping an out-of-order adjacent pair never shrinks a
+    prefix's cover).  Checking and preserving the invariant against THIS
+    order therefore reserves the least possible headroom: the slot
+    closest to completion is the one the reserve protects, it finishes
+    soonest, and its release funds the next link — whereas an
+    admission-ordered chain would park the whole engine behind the
+    oldest slot's outstanding tail.  Nearly-done (decoding) slots also
+    take before hungry young prefills — the decode-prioritized schedule
+    Sarathi-style co-scheduling wants.  FCFS is untouched where it is a
+    fairness guarantee: ADMISSION order (the gate) and waiting-array
+    WAKE order stay strictly ticket-FCFS; the chain only orders block
+    takes by safety.
+
+    Admission never breaks the chain regardless of where a newcomer's
+    demand would insert: with the newcomer appended last the chain holds
+    trivially (``demand ≤ NB`` — the submit-time check), so by the
+    exchange argument the ascending order of the post-admission state
+    holds too.
+
+    Implemented as stable composed argsorts (a lexsort); pure function of
+    ints, so host and device compute identical permutations."""
+    key3 = jnp.where(active, jnp.asarray(prio_key, jnp.int32), INT32_MAX)
+    key2 = jnp.where(active, jnp.asarray(prio_round, jnp.int32), INT32_MAX)
+    key1 = jnp.where(active, jnp.asarray(rem, jnp.int32), INT32_MAX)
+    o3 = jnp.argsort(key3, stable=True)
+    o2 = jnp.argsort(key2[o3], stable=True)
+    o = o3[o2]
+    o1 = jnp.argsort(key1[o], stable=True)
+    return o[o1]
+
+
+class ChunkPlan(NamedTuple):
+    """Per-slot outcome of one round's fused budget + Banker scan (all in
+    UNSORTED slot order)."""
+
+    take: jax.Array     # (S,) i32 — blocks granted this round
+    tokens: jax.Array   # (S,) i32 — prefill tokens to write this round
+    parked: jax.Array   # (S,) bool — block-stalled (park on the waiting array)
+    deficit: jax.Array  # (S,) i32 — grant advance that makes a parked slot
+    #                     runnable again (≥ 1 where parked; park_state input)
+    emit: jax.Array     # (S,) bool — decode-ready this round (post-take)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "budget", "block_size"))
+def chunk_plan(order: jax.Array, busy: jax.Array, parked: jax.Array,
+               woken: jax.Array, pos: jax.Array, plen: jax.Array,
+               max_new: jax.Array, held: jax.Array, free, *, chunk: int,
+               budget: int, block_size: int) -> ChunkPlan:
+    """Plan one engine round of continuous chunked prefill: split the
+    per-round prefill token ``budget`` over the prefilling slots, decide
+    every incremental block take (prefill chunks AND decode block-boundary
+    crossings), and park the block-stalled slots — one `lax.scan` over the
+    slots in priority ``order`` (see :func:`banker_order`).
+
+    Per sorted slot the scan carries ``(T, minM, budget_left)`` — blocks
+    taken so far, the running Banker margin, and the unspent token budget:
+
+      * a *prefilling* slot (``pos < plen``) wants ``min(chunk, plen−pos,
+        budget_left)`` tokens and the blocks to hold them; it accepts
+        PARTIAL grants (fewer blocks ⇒ a shorter chunk — Sarathi-style
+        degradation instead of all-or-nothing stalls);
+      * a *decoding* slot needs one block exactly when its write cursor
+        hits its capacity (``pos == held·BS``) — atomic (a token cannot be
+        split);
+      * a take by slot s is capped at ``min(free, min_{j<s} M_j) − T``
+        where ``M_j = free + Σheld_{<j} + Σtake_{<j} + take_j − rem_j`` —
+        the safety-invariant margin (module docstring): s may consume free
+        blocks only while every earlier-priority slot could still finish
+        on ``free + what its predecessors hold``;
+      * a slot that needed progress and got NO tokens/blocks is **parked**
+        with the grant deficit that would unblock it; parked slots whose
+        waiting-array bucket has not moved (``~woken``) skip the attempt
+        entirely — the no-global-spinning analogue (their demand still
+        shapes the margin: parked ≠ forgotten by the invariant).
+
+    ``woken`` is ignored for non-parked slots.  Budget is consumed by
+    realized tokens only (work conservation: blocks denied ⇒ budget flows
+    to the next slot).  Decode does not consume budget (the schedule is
+    decode-maximal: every decode-ready slot decodes every round).
+    Returns a :class:`ChunkPlan` in unsorted slot order.
+    """
+    BS = block_size
+    S = busy.shape[0]
+    free = jnp.asarray(free, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    plen = jnp.asarray(plen, jnp.int32)
+    held = jnp.asarray(held, jnp.int32)
+    rem = total_block_demand(plen, max_new, BS) - held
+    trying = busy & (~parked | woken)
+    prefilling = busy & (pos < plen)
+
+    held_b = jnp.where(busy, held, 0)[order]
+    cum_held = jnp.cumsum(held_b) - held_b  # A_j: Σ held of priority-preds
+    xs = (cum_held,) + tuple(a[order] for a in (busy, trying, prefilling,
+                                                pos, plen, held, rem))
+
+    def body(carry, x):
+        T, minM, budget_left = carry
+        A, b, t, pf, p, pl, h, r = x
+        want = jnp.where(pf & t, jnp.minimum(chunk, pl - p), 0)
+        ctb = jnp.minimum(want, budget_left)
+        need_pf = jnp.maximum(cdiv(p + ctb, BS) - h, 0)
+        dec_try = b & ~pf & t & (p >= h * BS)
+        need = jnp.where(pf, need_pf, jnp.where(dec_try, 1, 0))
+        cap = jnp.minimum(free, minM) - T
+        take = jnp.where(pf, jnp.clip(cap, 0, need),
+                         jnp.where(dec_try & (need <= cap), need, 0))
+        ct = jnp.where(pf, jnp.minimum(ctb, (h + take) * BS - p), 0)
+        newly = t & ((pf & (ctb > 0) & (ct == 0))
+                     | (dec_try & (take == 0)))
+        deficit = jnp.where(newly, 1 - jnp.minimum(cap, 0), 0)
+        # this slot's margin for every LATER taker: M_j = free + A_j + T_j
+        # + take_j − rem_j (invariant (I) rearranged; T is the exclusive
+        # cumulative take carried in)
+        M = jnp.where(b, free + A + T + take - r, INT32_MAX)
+        carry = (T + take, jnp.minimum(minM, M), budget_left - ct)
+        return carry, (take, ct, newly, deficit)
+
+    (_, _, _), (take_s, ct_s, park_s, def_s) = jax.lax.scan(
+        body, (jnp.int32(0), jnp.int32(INT32_MAX), jnp.int32(budget)), xs)
+
+    inv = jnp.zeros((S,), jnp.int32).at[order].set(
+        jnp.arange(S, dtype=jnp.int32))
+    take = take_s[inv]
+    tokens = ct_s[inv]
+    deficit = def_s[inv]
+    still_parked = busy & parked & ~woken
+    parked_out = park_s[inv] | still_parked
+    emit = busy & ~prefilling & (pos < (held + take) * BS)
+    return ChunkPlan(take=take, tokens=tokens, parked=parked_out,
+                     deficit=deficit, emit=emit)

@@ -96,6 +96,13 @@ class Request:
     finish_t: float = 0.0
     admit_round: int = -1  # global engine round of admission
     expire_round: int = -1  # global engine round of expiry/preemption
+    # --- continuous chunked prefill (kv_pool + chunked_prefill engines) ---
+    prefill_pos: int = 0  # prompt tokens prefilled so far
+    kv_blocks: int = 0  # pool blocks currently held (incremental takes)
+    prio_key: int = 0  # packed FCFS admission key (Banker order, secondary)
+    parked: bool = False  # block-stalled on the block semaphore's waiting array
+    park_bucket: int = 0  # observed TWAHash bucket (core.functional.park_state)
+    park_seq: int = 0  # bucket sequence at park time
 
 
 @dataclass
@@ -109,6 +116,8 @@ class EngineStats:
     backlog_skipped: int = 0  # requests NOT re-examined thanks to TWA buckets
     wakeups: int = 0
     host_syncs: int = 0  # host↔device round-trips (1/step; 1/megastep)
+    kv_block_stalls: int = 0  # cumulative parked slot-rounds (block waits)
+    prefill_chunks: int = 0  # prompt chunks written (chunked prefill)
 
 
 class ContinuousBatchingEngine:
@@ -127,6 +136,7 @@ class ContinuousBatchingEngine:
         backlog_cap: int = 4096,
         prompt_cap: int = 32,
         kv_pool: Optional[tuple] = None,
+        chunked_prefill: Optional[tuple] = None,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -154,6 +164,38 @@ class ContinuousBatchingEngine:
         # grant − ticket by construction) — block identities live in the
         # device pool, so paged engines must decode via megastep.
         self._kv_pool = kv_pool
+        # --- continuous chunked prefill (serving.prefill) ---
+        # ``chunked_prefill=(chunk_tokens, token_budget)``: admission gates
+        # on FIRST-CHUNK demand behind the reserved headroom, prompts
+        # prefill up to chunk_tokens per round under the per-round prefill
+        # token budget (Sarathi-style co-scheduling with decode), blocks
+        # are taken incrementally at block-boundary crossings, and
+        # block-stalled slots PARK on the block semaphore's waiting array
+        # (resumed FCFS when releases poke their bucket) — see
+        # serving/engine_state.py for the stall/park policy and the
+        # no-deadlock headroom invariant.
+        self._chunk, self._budget, self._kv_commit = 0, 0, 0
+        if chunked_prefill is not None:
+            if kv_pool is None:
+                raise ValueError(
+                    "chunked_prefill requires the block-paged pool "
+                    "(kv_pool=...): chunks allocate pool blocks "
+                    "incrementally")
+            ch, bu, *cw = chunked_prefill
+            if int(ch) < 1 or int(bu) < 1:
+                raise ValueError(
+                    f"chunked_prefill needs a positive chunk size and "
+                    f"token budget, got {chunked_prefill}")
+            self._chunk, self._budget = int(ch), int(bu)
+            # optional third element: the commitment watermark in BLOCKS
+            # (aggregate outstanding worst-case demand admission may keep
+            # in flight).  Default 9/16 of the pool: the measured sweet
+            # spot between utilization (higher watermark ⇒ more resident
+            # sequences ⇒ more written blocks) and safety-chain slack
+            # (lower ⇒ fewer parks serializing the endgame) — see
+            # benchmarks/serving_bench.run_longprompt.
+            self._kv_commit = int(cw[0]) if cw \
+                else max(1, int(kv_pool[0]) * 9 // 16)
         if kv_pool is not None:
             if tenants is None:
                 raise ValueError("kv_pool requires QoS mode (tenants=...)")
@@ -167,6 +209,12 @@ class ContinuousBatchingEngine:
             self._kv_mb = int(rest[0]) if rest else nb  # table width
             self._kv_free_blocks = nb
             self._kv_state = None  # persisted device KVPool across megasteps
+            # host mirror of the device block semaphore (chunked mode):
+            # takes advance ticket, releases post+poke, and the park/wake
+            # buckets come off THIS state — table_size/salt must match
+            # `engine_state.make_engine_state`'s pool (slot_table=64) so
+            # host-loop and megastep runs observe identical bucket moves
+            self._kv_sema = make_sema(count=nb, table_size=64)
         # --- multi-tenant QoS admission (admission.functional_qos) ---
         self._tenants = tenants
         if tenants is not None:
@@ -247,13 +295,37 @@ class ContinuousBatchingEngine:
                 f"unregistered tenant(s) {sorted(unknown)}; this engine "
                 f"serves tenants {list(self._tenant_names)}")
         if self._kv_pool is not None:
+            # submit-time capacity check: a request whose WHOLE-LIFETIME
+            # demand exceeds what the pool (or its slot table) can ever
+            # hold would stall forever — in chunked mode it would be
+            # admitted on its small first chunk and then park with a
+            # deficit no amount of releases can cover, so it is rejected
+            # here with a clear error instead.  Chunked demand uses the
+            # UNTRUNCATED prompt (chunked prompts are never truncated);
+            # this also closes the no-deadlock induction for newcomers
+            # (engine_state.py: headroom invariant needs demand ≤ pool).
             cap = min(self._kv_mb, self._kv_blocks)
             for r in reqs:
-                if self._kv_demand(r) > cap:
+                if self._chunk:
+                    plen = len(r.prompt) or 1
+                    if plen > self._prompt_cap:
+                        raise ValueError(
+                            f"request rid={r.rid} prompt ({plen} tokens) "
+                            f"exceeds prompt_cap={self._prompt_cap}; "
+                            "chunked prefill never truncates prompts — "
+                            "raise prompt_cap")
+                # the prompt_cap check above makes _kv_demand's truncation
+                # a no-op in chunked mode: ONE demand formula everywhere
+                # (host gate/headroom/chunk phase and the device paths all
+                # reduce to it — the bit-identity mirror depends on that)
+                dem = self._kv_demand(r)
+                if dem > cap:
                     raise ValueError(
-                        f"request rid={r.rid} needs {self._kv_demand(r)} KV "
-                        f"blocks (> {cap}): prompt+max_new must fit "
-                        f"{cap * self._kv_bs} pooled tokens")
+                        f"request rid={r.rid} needs {dem} KV blocks over "
+                        f"its lifetime (> {cap} = min(table, pool)): "
+                        f"prompt_len + max_new must fit "
+                        f"{cap * self._kv_bs} pooled tokens — it could "
+                        "never be served and would stall forever")
         with self._lock:
             now = self._clock()
             ids = [self._tindex[r.tenant_id] for r in reqs]
@@ -300,9 +372,14 @@ class ContinuousBatchingEngine:
         longest FCFS prefix (wrap-safe clamped ticket distance from the
         post-round grant frontier, tenant-index tiebreak — byte-identical
         key arithmetic) whose cumulative block demand fits the free pool;
-        strict FCFS, no bypass.  Consumes the granted demand from the
-        host counter.  Returns (granted, stalled) index lists into
-        ``cands``, both in gate order."""
+        strict FCFS, no bypass.  Up-front mode gates on worst-case demand
+        and consumes it from the host counter; chunked mode gates on
+        FIRST-CHUNK demand behind the reserved headroom
+        (`functional_qos.block_headroom` — the no-deadlock invariant) and
+        consumes nothing (blocks are taken incrementally by the chunk
+        phase).  Returns (granted, stalled) index lists into ``cands``,
+        both in gate order; granted requests get their Banker priority
+        key stamped."""
         from .engine_state import _D_CLAMP, _T_BITS
 
         grants = np.asarray(self.qos.grant)
@@ -315,16 +392,62 @@ class ContinuousBatchingEngine:
 
         order = sorted(range(len(cands)), key=key)
         free = self._kv_free_blocks
+        commit_free = bootstrap = 0
+        if self._chunk:
+            free -= self._kv_headroom()
+            total_rem = sum(self._kv_rem(r) for r in self.active.values())
+            commit_free = self._kv_commit - total_rem
+            bootstrap = total_rem == 0
         granted, stalled = [], []
         for i in order:
-            dem = self._kv_demand(cands[i][0])
-            if not stalled and dem <= free:  # strict FCFS: first misfit blocks all
+            r = cands[i][0]
+            if self._chunk:
+                dem = self._kv_first_chunk(r)
+                commit = self._kv_demand(r)
+                ok = dem <= free and (commit <= commit_free
+                                      or (bootstrap and not granted))
+            else:
+                dem = self._kv_demand(r)
+                commit = 0
+                ok = dem <= free
+            if not stalled and ok:  # strict FCFS: first misfit blocks all
                 free -= dem
+                commit_free -= commit
+                r.prio_key = key(i)
                 granted.append(i)
             else:
                 stalled.append(i)
-        self._kv_free_blocks = free
+        if not self._chunk:
+            self._kv_free_blocks = free
         return granted, stalled
+
+    def _kv_first_chunk(self, r: Request) -> int:
+        """First-chunk block demand — what chunked admission gates on
+        (mirrors `serving.prefill.first_chunk_demand`)."""
+        plen = min(len(r.prompt), self._prompt_cap) or 1
+        return max(1, -(-min(self._chunk, plen) // self._kv_bs))
+
+    def _kv_rem(self, r: Request) -> int:
+        """Worst-case REMAINING block demand of an active request
+        (`_kv_demand` minus the blocks already taken)."""
+        return self._kv_demand(r) - r.kv_blocks
+
+    def _kv_headroom(self) -> int:
+        """Host mirror of `functional_qos.block_headroom` over the
+        nearest-completion safety chain (`prefill.banker_order`): the
+        smallest free-pool level that keeps every active sequence's
+        remaining worst-case demand covered by the pool plus what its
+        chain-predecessors will release (see engine_state.py's
+        headroom-invariant docs)."""
+        acts = sorted(self.active.items(),
+                      key=lambda kv: (self._kv_rem(kv[1]),
+                                      kv[1].admit_round, kv[1].prio_key,
+                                      kv[0]))
+        cum = head = 0
+        for _, r in acts:
+            head = max(head, self._kv_rem(r) - cum)
+            cum += r.kv_blocks
+        return max(head, 0)
 
     def _fcfs_sort(self, reqs: list[Request]) -> None:
         """Sort admitted requests into wrap-safe admission order: signed
@@ -581,9 +704,21 @@ class ContinuousBatchingEngine:
         else:
             self.stats.finished += 1
         if self._kv_pool is not None:
-            # the sequence's worst-case block reservation posts back — the
-            # host counter mirrors the device block semaphore's `post`
-            self._kv_free_blocks += self._kv_demand(req)
+            if self._chunk:
+                # incremental mode: the blocks the sequence ACTUALLY took
+                # post back, and the host block semaphore pokes the
+                # waiting-array buckets of the enabled range — exactly the
+                # device `pool_release`, so parked requests observe the
+                # same wake sequence the megastep path would
+                self._kv_free_blocks += req.kv_blocks
+                self._kv_sema = post_batch(self._kv_sema, req.kv_blocks)
+                req.kv_blocks = 0
+                req.parked = False
+            else:
+                # the sequence's worst-case block reservation posts back —
+                # the host counter mirrors the device block semaphore's
+                # `post`
+                self._kv_free_blocks += self._kv_demand(req)
         # slot freed → post: advances grant AND pokes the bucket of the next
         # waiting ticket (successor staging — the paper's SemaPost).  In QoS
         # mode the freed slot instead re-enters the weighted replenishment.
@@ -628,23 +763,106 @@ class ContinuousBatchingEngine:
                 req.admit_round = rnd
                 self.active[slot] = req
                 self.stats.admitted += 1
-                self.prefill_fn(req)  # engine-owner fills the row's cache
+                if self._chunk:
+                    # chunked: no instant prefill — the chunk phase below
+                    # streams the prompt in; prefill_fn fires on the round
+                    # the last chunk lands (full KV available)
+                    req.prefill_pos = 0
+                    req.kv_blocks = 0
+                else:
+                    self.prefill_fn(req)  # engine-owner fills the row's cache
 
             if not self.active:
                 self._round_no = rnd + 1
                 return 0
             self.stats.steps += 1
-            logits = self.step_fn(list(self.active.values()))
-            next_tokens = sample_fn(logits)
-            done_slots = []
-            for (slot, req), tok in zip(list(self.active.items()), next_tokens):
-                req.out_tokens.append(int(tok))
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    done_slots.append(slot)
-            for slot in done_slots:
-                self._finish(slot, "length")
+            if self._chunk:
+                decode = [(int(s), self.active[int(s)])
+                          for s in self._chunk_step()]
+            else:
+                decode = list(self.active.items())
+            if decode:
+                logits = self.step_fn([r for _, r in decode])
+                next_tokens = sample_fn(logits)
+                done_slots = []
+                for (slot, req), tok in zip(decode, next_tokens):
+                    req.out_tokens.append(int(tok))
+                    if len(req.out_tokens) >= req.max_new_tokens:
+                        done_slots.append(slot)
+                for slot in done_slots:
+                    self._finish(slot, "length")
             self._round_no = rnd + 1
             return len(self.active)
+
+    def _chunk_step(self) -> np.ndarray:
+        """Host chunk phase — ONE call into the SAME jitted planner the
+        scanned megastep uses (`serving.prefill.chunk_plan` over
+        `banker_order`), applied to the per-request host state: split the
+        prefill token budget, take blocks incrementally from the host
+        block-semaphore mirror, park the block-stalled requests on its
+        waiting array, and return the decode-ready slot indices.  Because
+        planner, order, and semaphore arithmetic are shared with
+        `engine_state._chunk_phase`, host-loop and megastep serving stay
+        bit-identical round-for-round (tests/test_chunked_prefill.py)."""
+        from ..core.functional import park_state
+        from .prefill import banker_order, chunk_plan
+
+        S = self.n_slots
+        busy = np.zeros(S, bool)
+        parked = np.zeros(S, bool)
+        woken = np.zeros(S, bool)
+        pos = np.zeros(S, np.int32)
+        plen = np.zeros(S, np.int32)
+        mxn = np.zeros(S, np.int32)
+        held = np.zeros(S, np.int32)
+        prio_r = np.zeros(S, np.int32)
+        prio_k = np.zeros(S, np.int32)
+        seq = np.asarray(self._kv_sema.bucket_seq)
+        rem = np.zeros(S, np.int32)
+        for s, r in self.active.items():
+            pl = min(len(r.prompt), self._prompt_cap) or 1
+            busy[s] = True
+            parked[s] = r.parked
+            woken[s] = r.parked and seq[r.park_bucket] != r.park_seq
+            pos[s] = (r.prefill_pos if r.prefill_pos < pl
+                      else pl + len(r.out_tokens))
+            plen[s] = pl
+            mxn[s] = r.max_new_tokens
+            held[s] = r.kv_blocks
+            rem[s] = self._kv_rem(r)
+            prio_r[s] = r.admit_round
+            prio_k[s] = r.prio_key
+        order = banker_order(rem, prio_r, prio_k, busy)
+        plan = chunk_plan(order, busy, parked, woken, pos, plen, mxn, held,
+                          self._kv_free_blocks, chunk=self._chunk,
+                          budget=self._budget, block_size=self._kv_bs)
+        take = np.asarray(plan.take)
+        tokens = np.asarray(plan.tokens)
+        parked_o = np.asarray(plan.parked)
+        deficit = np.asarray(plan.deficit)
+        newly = parked_o & (deficit > 0)
+        if newly.any():
+            bkt, sq = park_state(self._kv_sema,
+                                 np.maximum(deficit, 1).astype(np.uint32))
+            bkt, sq = np.asarray(bkt), np.asarray(sq)
+        total = int(take.sum())
+        self._kv_free_blocks -= total
+        self._kv_sema = self._kv_sema._replace(
+            ticket=self._kv_sema.ticket + jnp.uint32(total))
+        for s, r in self.active.items():
+            pl = int(plen[s])
+            r.kv_blocks += int(take[s])
+            r.parked = bool(parked_o[s])
+            if newly[s]:
+                r.park_bucket = int(bkt[s])
+                r.park_seq = int(sq[s])
+            if tokens[s]:
+                r.prefill_pos += int(tokens[s])
+                if r.prefill_pos >= pl:
+                    self.prefill_fn(r)  # last chunk landed: full KV ready
+        self.stats.prefill_chunks += int((tokens > 0).sum())
+        self.stats.kv_block_stalls += int(parked_o.sum())
+        return np.flatnonzero(np.asarray(plan.emit))
 
     # ----------------------------------------------------------- megastep ---
 
@@ -679,7 +897,13 @@ class ContinuousBatchingEngine:
         the block-paged KV pool; the device `KVPool` (block semaphore +
         tables) persists across launches alongside ``megastep_model``, so
         paged engines must decode through megastep (host `step()` keeps
-        only the free-block counter).  Returns the number of busy slots
+        only the free-block counter).  With ``chunked_prefill=`` every
+        scanned round additionally co-schedules prompt chunks with decode
+        (incremental block takes, waiting-array parks — see
+        `serving.engine_state`); ``token_fn`` must handle the prefill
+        phase (`engine_state.chunked_prefill_token_fn` or the
+        static-window factory), and per-request prefill/park state rides
+        host↔device across launches.  Returns the number of busy slots
         after the last round.
         """
         from .engine_state import (
@@ -695,6 +919,15 @@ class ContinuousBatchingEngine:
         if K < 1:
             raise ValueError("megastep needs K >= 1")
         token_fn = token_fn or zero_token_fn
+        window = getattr(token_fn, "_chunk_window", None)
+        if self._chunk and window is not None and window < self._chunk:
+            # a narrower scatter window than the engine's chunk would
+            # silently drop the tail of every scheduled chunk (pos still
+            # advances by the full chunk) — corrupt KV, no error
+            raise ValueError(
+                f"token_fn chunk window ({window}) is smaller than the "
+                f"engine's chunk size ({self._chunk}); build it with "
+                f"make_chunked_prefill_token_fn({self._chunk})")
         with self._lock:
             self.stats.host_syncs += 1
             base = self._round_no
@@ -773,6 +1006,14 @@ class ContinuousBatchingEngine:
             sem = np.zeros(S, np.int32)
             stok = np.zeros(S, np.int32)
             spos = np.zeros(S, np.int32)
+            spl = np.zeros(S, np.int32)
+            sprm = np.zeros((S, P), np.int32)
+            spri_r = np.zeros(S, np.int32)
+            spri_k = np.zeros(S, np.int32)
+            sprk = np.zeros(S, bool)
+            spb = np.zeros(S, np.int32)
+            sps = np.zeros(S, np.uint32)
+            chunked = self._chunk > 0
             for slot, r in self.active.items():
                 sb[slot] = True
                 srow[slot] = B + slot  # host-resolved: active at launch
@@ -789,10 +1030,27 @@ class ContinuousBatchingEngine:
                 # block tables / dense ring cursors index by the DEVICE
                 # cursor — an untruncated re-seed would shift every later
                 # KV write past the reservation
-                spos[slot] = (min(len(r.prompt), self._prompt_cap) or 1) \
-                    + len(r.out_tokens)
+                plen_t = min(len(r.prompt), self._prompt_cap) or 1
+                spl[slot] = plen_t
+                if chunked:
+                    # mid-prefill slots resume at their chunk cursor; the
+                    # remaining prompt must ride along (the backlog row
+                    # that held it was recycled at admission)
+                    spos[slot] = (r.prefill_pos if r.prefill_pos < plen_t
+                                  else plen_t + len(r.out_tokens))
+                    p = r.prompt[-P:] if r.prompt else [0]
+                    sprm[slot, :len(p)] = p
+                    spri_r[slot] = r.admit_round
+                    spri_k[slot] = r.prio_key
+                    sprk[slot] = r.parked
+                    spb[slot] = r.park_bucket
+                    sps[slot] = r.park_seq
+                else:
+                    spos[slot] = plen_t + len(r.out_tokens)
             state = state._replace(
                 round_no=jnp.asarray(base, jnp.int32),
+                stalls=jnp.asarray(self.stats.kv_block_stalls, jnp.int32),
+                chunks=jnp.asarray(self.stats.prefill_chunks, jnp.int32),
                 backlog=state.backlog._replace(
                     valid=jnp.asarray(valid), tenant=jnp.asarray(ids),
                     ticket=jnp.asarray(tks), deadline=jnp.asarray(dls),
@@ -803,7 +1061,11 @@ class ContinuousBatchingEngine:
                     rid=jnp.asarray(srid), tenant=jnp.asarray(sten),
                     deadline=jnp.asarray(sdl), max_new=jnp.asarray(smx),
                     emitted=jnp.asarray(sem), token=jnp.asarray(stok),
-                    pos=jnp.asarray(spos)),
+                    pos=jnp.asarray(spos), plen=jnp.asarray(spl),
+                    prompt=jnp.asarray(sprm), prio_r=jnp.asarray(spri_r),
+                    prio_k=jnp.asarray(spri_k), parked=jnp.asarray(sprk),
+                    park_bucket=jnp.asarray(spb), park_seq=jnp.asarray(sps),
+                    chunk=jnp.zeros(S, jnp.int32)),
                 slot_sema=state.slot_sema._replace(
                     ticket=jnp.uint32(int(sb.sum()))))
 
@@ -833,7 +1095,10 @@ class ContinuousBatchingEngine:
             st, model, ys = megastep_jit(
                 state, model, jnp.asarray(nows_a), token_fn=token_fn,
                 admit_fn=admit_fn, admit_impl=admit_impl,
-                block_size=self._kv_bs if paged else 0)
+                block_size=self._kv_bs if paged else 0,
+                chunk=self._chunk if paged else 0,
+                budget=self._budget if paged else 0,
+                commit=self._kv_commit if paged else 0)
             self.megastep_model = model
             self._megastep_model_last = model
 
@@ -913,6 +1178,25 @@ class ContinuousBatchingEngine:
                 self._kv_free_blocks = int(np.int32(
                     np.uint32(st_h.kv.pool.sema.grant)
                     - np.uint32(st_h.kv.pool.sema.ticket)))
+            if chunked:
+                # carry each still-running request's prefill/park state to
+                # the next launch (the device pool itself persists in
+                # _kv_state; this is the per-request view of it).  The
+                # host block-semaphore mirror also resyncs to the device
+                # counters/buckets — unreachable today (mixed step()/
+                # megastep serving raises above), but the mirror must
+                # never be allowed to go stale against carried park state
+                self._kv_sema = st.kv.pool.sema
+                tbl_h = np.asarray(st_h.kv.tbl)
+                for s, r in self.active.items():
+                    r.prefill_pos = int(st_h.slots.pos[s])
+                    r.prio_key = int(st_h.slots.prio_k[s])
+                    r.parked = bool(st_h.slots.parked[s])
+                    r.park_bucket = int(st_h.slots.park_bucket[s])
+                    r.park_seq = int(st_h.slots.park_seq[s])
+                    r.kv_blocks = int((tbl_h[s] >= 0).sum())
+                self.stats.kv_block_stalls = int(st_h.stalls)
+                self.stats.prefill_chunks = int(st_h.chunks)
             self._round_no = base + K
             return int(st_h.slots.busy.sum())
 
@@ -928,11 +1212,25 @@ class ContinuousBatchingEngine:
         }
         if self._kv_pool is not None:
             # block-pool gauges (the block semaphore's counter identity):
-            # free = unreserved pool blocks, live = reserved by admitted
-            # sequences' worst-case demand
+            # free = unreserved pool blocks, live = reserved blocks (whole
+            # worst-case demand up-front; only the taken blocks in chunked
+            # mode)
             tel["kv_blocks_free"] = int(self._kv_free_blocks)
             tel["kv_blocks_live"] = int(self._kv_blocks
                                         - self._kv_free_blocks)
+            # pool_utilization = blocks actually HOLDING tokens / pool —
+            # the gap to kv_blocks_live is the reservation waste the
+            # chunked-incremental mode exists to reclaim
+            written = 0
+            for r in self.active.values():
+                plen = min(len(r.prompt), self._prompt_cap) or 1
+                cur = (r.prefill_pos if self._chunk and r.prefill_pos < plen
+                       else plen + len(r.out_tokens))
+                written += -(-cur // self._kv_bs) if cur else 0
+            tel["pool_utilization"] = written / self._kv_blocks
+            tel["kv_block_stalls"] = self.stats.kv_block_stalls
+            tel["prefill_chunks"] = self.stats.prefill_chunks
+            tel["parked_slots"] = sum(r.parked for r in self.active.values())
         if self._tenants is not None:
             total = sum(self.tenant_admitted.values())
             tel["backlog"] = int(self._tenant_live.sum())

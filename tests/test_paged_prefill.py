@@ -1,0 +1,147 @@
+"""Ragged blockwise flash-prefill kernel (`kernels/paged_prefill`) — the
+chunked-prefill tentpole's kernel tests:
+
+  * bit-exactness vs the blockwise oracle `ref.paged_prefill_ref`
+    (interpret mode) across ragged per-slot chunk sizes and offsets
+    (block-aligned AND mid-block), idle slots, GQA head groupings, and
+    random block-table permutations — outputs AND both written-back
+    pools;
+  * the in-pass KV writeback: chunk rows land at exactly
+    ``tbl[s, t//BS] · BS + t%BS``, blocks of OTHER slots and unallocated
+    pool blocks are bit-untouched (the aliased trash-block routing);
+  * chunked == one-shot semantics: driving a prompt through the kernel in
+    arbitrary chunk splits reproduces the one-shot causal attention
+    (`ref.mha_ref`) for every chunk's rows, and the final pool content is
+    split-invariant bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.kernels.paged_prefill import paged_prefill
+from repro.kernels.ref import mha_ref, paged_prefill_ref
+
+
+def _mk(seed, S, CT, H, KV, hd, NB, BS, MB, offs, lens):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((S, CT, H, hd)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((S, CT, KV, hd)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((S, CT, KV, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NB, BS, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NB, BS, KV, hd)), jnp.float32)
+    perm = rng.permutation(NB)
+    tbl = np.full((S, MB), -1, np.int32)
+    n = 0
+    for s in range(S):
+        nb_s = -(-(int(offs[s]) + int(lens[s])) // BS)
+        for i in range(nb_s):
+            tbl[s, i] = perm[n]
+            n += 1
+    return q, kc, vc, kp, vp, jnp.asarray(tbl), \
+        jnp.asarray(offs, jnp.int32), jnp.asarray(lens, jnp.int32)
+
+
+def _assert_bitexact(args):
+    out_k, kpk, vpk = paged_prefill(*args, interpret=True)
+    out_r, kpr, vpr = paged_prefill_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(kpk), np.asarray(kpr))
+    np.testing.assert_array_equal(np.asarray(vpk), np.asarray(vpr))
+    return out_k, kpk, vpk
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_paged_prefill_bitexact_property(seed):
+    """ISSUE acceptance: kernel ≡ oracle bit-for-bit over random ragged
+    chunk offsets/lengths (unaligned starts included), idle slots, and
+    permuted tables — attention outputs and both written-back pools."""
+    rng = np.random.default_rng(seed)
+    S, CT, KV, hd = 4, 8, 2, 8
+    H = KV * int(rng.integers(1, 3))  # GQA group 1 or 2
+    NB, BS, MB = 32, 4, 8
+    offs = rng.integers(0, 16, S)
+    lens = rng.integers(0, CT + 1, S)  # 0 ⇒ idle slot this round
+    lens = np.where(offs + lens > MB * BS, 0, lens)
+    args = _mk(seed, S, CT, H, KV, hd, NB, BS, MB, offs, lens)
+    _assert_bitexact(args)
+
+
+def test_paged_prefill_writeback_targets_and_isolation():
+    """The in-pass writeback lands every chunk token at its table slot and
+    touches NOTHING else: other slots' blocks and unallocated pool blocks
+    are bit-identical before/after (aliased trash-block routing)."""
+    S, CT, H, KV, hd = 2, 6, 2, 2, 4
+    NB, BS, MB = 16, 4, 8
+    offs, lens = np.asarray([3, 0]), np.asarray([5, 4])
+    args = _mk(7, S, CT, H, KV, hd, NB, BS, MB, offs, lens)
+    q, kc, vc, kp, vp, tbl, off_a, len_a = args
+    _, kp2, vp2 = _assert_bitexact(args)
+    tbl_np = np.asarray(tbl)
+    touched = set()
+    for s in range(S):
+        for t in range(int(offs[s]), int(offs[s] + lens[s])):
+            b, r = int(tbl_np[s, t // BS]), t % BS
+            touched.add(b)
+            np.testing.assert_array_equal(
+                np.asarray(kp2)[b, r], np.asarray(kc)[s, t - int(offs[s])])
+            np.testing.assert_array_equal(
+                np.asarray(vp2)[b, r], np.asarray(vc)[s, t - int(offs[s])])
+    for b in range(NB):
+        if b not in touched:
+            np.testing.assert_array_equal(np.asarray(kp2)[b],
+                                          np.asarray(kp)[b])
+            np.testing.assert_array_equal(np.asarray(vp2)[b],
+                                          np.asarray(vp)[b])
+
+
+@pytest.mark.parametrize("splits", [[11], [4, 4, 3], [1, 5, 2, 3],
+                                    [8, 3], [2, 2, 2, 2, 2, 1]])
+def test_chunked_equals_one_shot_prefill(splits):
+    """Driving one prompt through the kernel in ANY chunk split reproduces
+    the one-shot causal attention for every row, and the final pool is
+    bit-identical across splits (the chunk-size-invariance contract the
+    engine property tests rely on)."""
+    assert sum(splits) == 11
+    P, H, KV, hd = 11, 4, 2, 8
+    NB, BS, MB = 16, 4, 4
+    rng = np.random.default_rng(3)
+    qf = jnp.asarray(rng.standard_normal((1, P, H, hd)), jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((1, P, KV, hd)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((1, P, KV, hd)), jnp.float32)
+    dense = mha_ref(qf, kf, vf, causal=True)[0]  # (P, H, hd)
+    tbl = jnp.asarray([[2, 7, 5, -1]], jnp.int32)
+    kp = jnp.zeros((NB, BS, KV, hd), jnp.float32)
+    vp = jnp.zeros((NB, BS, KV, hd), jnp.float32)
+    CT = max(splits)
+    off = 0
+    outs = []
+    for ln in splits:
+        pad = ((0, 0), (0, CT - ln), (0, 0), (0, 0))
+        out, kp, vp = paged_prefill(
+            jnp.pad(qf[:, off:off + ln], pad),
+            jnp.pad(kf[:, off:off + ln], pad),
+            jnp.pad(vf[:, off:off + ln], pad),
+            kp, vp, tbl, jnp.asarray([off]), jnp.asarray([ln]),
+            interpret=True)
+        outs.append(np.asarray(out)[0, :ln])
+        off += ln
+    got = np.concatenate(outs, axis=0)
+    np.testing.assert_allclose(got, np.asarray(dense), atol=2e-5, rtol=2e-5)
+    # final pool content is split-invariant bit-for-bit (one-shot pass)
+    _, kp1, vp1 = paged_prefill(
+        qf, kf, vf, jnp.zeros_like(kp), jnp.zeros_like(vp), tbl,
+        jnp.asarray([0]), jnp.asarray([P]), interpret=True)
+    np.testing.assert_array_equal(np.asarray(kp)[np.asarray(tbl)[0, :3]],
+                                  np.asarray(kp1)[np.asarray(tbl)[0, :3]])
+    np.testing.assert_array_equal(np.asarray(vp)[np.asarray(tbl)[0, :3]],
+                                  np.asarray(vp1)[np.asarray(tbl)[0, :3]])
