@@ -14,6 +14,16 @@ one continuous-batching engine, demonstrating
 Run:  PYTHONPATH=src python examples/serve_multitenant.py [--kernel]
                                                           [--megastep]
                                                           [--paged]
+                                                          [--trace]
+
+Observability (``--trace``): attaches a `repro.obs.EngineObs` with a
+streaming `JsonlSink` — every engine round (host ``step()`` or megastep
+ring drain, identical records either way) appends one JSON line to
+``trace_multitenant.jsonl`` with the per-round gauges and the TWA
+waiting-array probes (bucket-occupancy histogram, per-tenant credit,
+poke-window slack), and resolved requests feed per-tenant TTFT/TPOT
+distributions.  At exit the rendered SLO-attainment table prints.
+Attaching the observer adds zero host syncs (see src/repro/obs/README.md).
 
 ``--kernel`` (or ``ContinuousBatchingEngine(..., use_kernel=True)``) routes
 the whole tenant round — expire → weighted replenish → FCFS admit →
@@ -62,7 +72,27 @@ from repro.serving.scheduler import ContinuousBatchingEngine, Request
 WEIGHTS = {"gold": 4.0, "silver": 2.0, "bronze": 1.0}
 
 
-def main_paged(K: int = 16) -> None:
+def _make_obs(trace: bool, path: str, ttft_target: float):
+    """Build the ``--trace`` observer (or None): streaming JSONL sink +
+    per-tenant SLO accumulators with a rolling-median companion trace."""
+    if not trace:
+        return None
+    from repro.obs import EngineObs, JsonlSink
+
+    return EngineObs([JsonlSink(path)], ttft_target=ttft_target,
+                     smooth_window=9)
+
+
+def _finish_trace(obs, path: str) -> None:
+    if obs is None:
+        return
+    n = obs.sinks[0].emitted
+    obs.close()
+    print(f"[trace] {n} per-round records streamed to {path}")
+    print(obs.render_table())
+
+
+def main_paged(K: int = 16, trace: bool = False) -> None:
     """Mixed-length multi-tenant serving over the block-paged pool: 64
     blocks × 8 tokens serve up to 12 slots (vs 4 dense rings at the same
     HBM), short requests pay short-sequence cost, and the block gauges
@@ -76,9 +106,11 @@ def main_paged(K: int = 16) -> None:
     )
 
     NB, BS, vocab = 64, 8, 50
+    trace_path = "trace_multitenant.jsonl"
+    obs = _make_obs(trace, trace_path, ttft_target=30.0)
     eng = ContinuousBatchingEngine(
         lambda a: None, lambda r: None, n_slots=12, tenants=WEIGHTS,
-        kv_pool=(NB, BS, 16))
+        kv_pool=(NB, BS, 16), obs=obs)
     eng.megastep_model = make_paged_pool_model(
         jax.random.PRNGKey(0), vocab=vocab, d=16, num_blocks=NB,
         block_size=BS)
@@ -114,13 +146,17 @@ def main_paged(K: int = 16) -> None:
     assert tel["kv_blocks_free"] == NB and tel["kv_blocks_live"] == 0
     assert tel["parked_slots"] == 0 and tel["pool_utilization"] == 0.0
     assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+    _finish_trace(obs, trace_path)
     print("[example] block-paged KV pool admission + decode OK")
 
 
-def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16):
+def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16,
+         trace: bool = False):
+    trace_path = "trace_multitenant.jsonl"
+    obs = _make_obs(trace, trace_path, ttft_target=30.0)
     eng = ContinuousBatchingEngine(
         lambda active: np.zeros(len(active)), lambda r: None, n_slots=6,
-        tenants=WEIGHTS, use_kernel=use_kernel)
+        tenants=WEIGHTS, use_kernel=use_kernel, obs=obs)
     reqs, rid = [], 0
     for _ in range(120):
         for t in WEIGHTS:
@@ -165,13 +201,19 @@ def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16):
           f"{s.backlog_skipped} (TWA bucket gating at tenant granularity)")
     assert eng.stats.expired == 8 and eng.stats.finished == len(reqs)
     assert tel["queue_depth"] == 0
+    if obs is not None:
+        # one record per engine round regardless of host-step vs megastep
+        assert obs.rounds == steps, (obs.rounds, steps)
+        assert tel["slo"]["tenants"]["bronze"]["expired"] == 8
+    _finish_trace(obs, trace_path)
     return eng
 
 
 if __name__ == "__main__":
+    trace = "--trace" in sys.argv[1:]
     if "--paged" in sys.argv[1:]:
-        main_paged()
+        main_paged(trace=trace)
     else:
         main(use_kernel="--kernel" in sys.argv[1:],
-             use_megastep="--megastep" in sys.argv[1:])
+             use_megastep="--megastep" in sys.argv[1:], trace=trace)
         print("[example] weighted-FCFS admission + tombstoned deadlines OK")

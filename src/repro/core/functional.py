@@ -314,6 +314,19 @@ def segment_counts(ids: jax.Array, mask: jax.Array, num_segments: int,
         num_segments=num_segments)
 
 
+def bucket_histogram(buckets: jax.Array, mask: jax.Array,
+                     table_size: int) -> jax.Array:
+    """Waiting-array occupancy histogram — the paper's observable: how many
+    long-term waiters currently observe each TWAHash bucket.  ``buckets``
+    are the waiters' observed bucket indices (e.g. ``Slots.park_bucket``),
+    ``mask`` selects the rows that are actually parked.  A flat histogram
+    means the salt disperses waiters well (bounded re-checks per poke); a
+    spike is the hash-aliasing pathology the paper's salt term exists to
+    avoid.  Returns (table_size,) i32."""
+    return segment_counts(jnp.asarray(buckets, jnp.int32), mask, table_size,
+                          dtype=jnp.int32)
+
+
 def ticket_order(sema_ids: jax.Array, tickets: jax.Array,
                  num_semas: int) -> jax.Array:
     """Stable permutation putting every semaphore's rows in wrap-safe ticket

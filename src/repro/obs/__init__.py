@@ -1,0 +1,39 @@
+"""Host-side observability for the TWA serving engine (PR 6).
+
+The device side of the observability story lives in
+`serving.engine_state`: an in-scan :class:`TelemetryRing` appended to by
+every scanned engine round and drained in the megastep's ONE host sync.
+This package is the host side — everything downstream of the per-round
+sample stream:
+
+* :class:`LogHistogram` — log-bucketed streaming histograms for
+  p50/p99/p999 quantiles in O(1) memory (latency-style heavy tails);
+* :class:`RollingMedian` — rolling-median trace smoothing for noisy
+  per-round gauges (à la HomebrewNLP's ``wandblog.py``);
+* sinks — :class:`JsonlSink`, :class:`StdoutSink`, :class:`CallbackSink`:
+  pluggable per-round record consumers;
+* :class:`TenantSLO` / :class:`EngineObs` — per-tenant TTFT/TPOT event
+  tracking keyed on the engine's virtual ``clock=`` and SLO-attainment
+  reporting, consumed by ``scheduler.telemetry()`` (the ``slo`` key),
+  ``benchmarks/serving_bench.run_slo``, and
+  ``examples/serve_multitenant.py --trace``.
+
+Everything here is plain Python/numpy — no jax imports, no device work:
+attaching an ``EngineObs`` never adds a host sync to either serving path.
+"""
+
+from .hist import LogHistogram
+from .recorder import EngineObs
+from .sinks import CallbackSink, JsonlSink, StdoutSink
+from .slo import TenantSLO
+from .smooth import RollingMedian
+
+__all__ = [
+    "LogHistogram",
+    "RollingMedian",
+    "JsonlSink",
+    "StdoutSink",
+    "CallbackSink",
+    "TenantSLO",
+    "EngineObs",
+]

@@ -1,0 +1,107 @@
+"""`EngineObs` — the object the engine's ``obs=`` parameter accepts.
+
+Glues the pieces together: per-round samples (host mirror or megastep
+ring drain — identical records either way) fan out to the sinks with an
+optional rolling-median companion trace; resolved requests feed the
+per-tenant :class:`TenantSLO` accumulators; ``summary()`` is what
+``scheduler.telemetry()`` exposes under the ``slo`` key and
+``render_table()`` is the human view ``--trace`` prints at exit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from .slo import TenantSLO
+from .smooth import TraceSmoother
+
+# per-round gauges worth a smoothed companion trace (noisy sawtooths)
+_SMOOTH_FIELDS = ("tokens", "active", "kv_free", "prefill_tokens")
+
+
+class EngineObs:
+    """Observability layer for `ContinuousBatchingEngine`.
+
+    ``sinks``: iterable of objects with ``emit(record)`` (see
+    `repro.obs.sinks`).  ``ttft_target``/``tpot_target``: optional SLO
+    targets in clock units, applied to every tenant.  ``smooth_window``:
+    when > 1, each sink record carries a ``"smoothed"`` sub-dict of
+    rolling medians over the noisy per-round gauges.
+
+    Duck-typed against the engine: `record_round` takes the per-round
+    sample dict, `record_request` the resolved ``Request`` (reads its
+    lifecycle clock stamps) — no scheduler import, no jax, no device work.
+    """
+
+    def __init__(self, sinks=(), *, ttft_target: Optional[float] = None,
+                 tpot_target: Optional[float] = None,
+                 smooth_window: int = 1, resolution: float = 0.01):
+        self.sinks = list(sinks)
+        self.ttft_target = ttft_target
+        self.tpot_target = tpot_target
+        self._resolution = resolution
+        self.tenants: dict[str, TenantSLO] = {}
+        self.rounds = 0
+        self._smoother = (TraceSmoother(_SMOOTH_FIELDS, smooth_window)
+                          if smooth_window > 1 else None)
+
+    # ------------------------------------------------------- engine feed ----
+
+    def record_round(self, sample: dict) -> None:
+        self.rounds += 1
+        record = sample
+        if self._smoother is not None:
+            record = dict(sample)
+            record["smoothed"] = self._smoother.push(sample)
+        for sink in self.sinks:
+            sink.emit(record)
+
+    def record_request(self, req) -> None:
+        """A resolved request (finished / tombstoned / preempted)."""
+        t = getattr(req, "tenant_id", "default")
+        slo = self.tenants.get(t)
+        if slo is None:
+            slo = self.tenants[t] = TenantSLO(
+                ttft_target=self.ttft_target, tpot_target=self.tpot_target,
+                resolution=self._resolution)
+        slo.record(
+            n_tokens=len(getattr(req, "out_tokens", ())),
+            expired=bool(getattr(req, "expired", False)),
+            preempted=bool(getattr(req, "preempted", False)),
+            submit_clock=getattr(req, "submit_clock", None),
+            first_tok_clock=getattr(req, "first_tok_clock", None),
+            last_tok_clock=getattr(req, "last_tok_clock", None))
+
+    # ---------------------------------------------------------- reporting ---
+
+    def summary(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "tenants": {t: s.summary() for t, s in sorted(self.tenants.items())},
+        }
+
+    def render_table(self) -> str:
+        """Fixed-width per-tenant SLO table (the ``--trace`` exit view)."""
+        hdr = (f"{'tenant':<10} {'done':>5} {'exp':>4} {'pre':>4} "
+               f"{'attain':>7} {'ttft p50':>9} {'ttft p99':>9} "
+               f"{'tpot p50':>9} {'tpot p99':>9}")
+        lines = [hdr, "-" * len(hdr)]
+
+        def fmt(x: float) -> str:
+            return "-" if x is None or math.isnan(x) else f"{x:.3f}"
+
+        for t, s in sorted(self.tenants.items()):
+            r = s.summary()
+            lines.append(
+                f"{t:<10} {r['finished']:>5} {r['expired']:>4} "
+                f"{r['preempted']:>4} {fmt(r['attainment']):>7} "
+                f"{fmt(r['ttft']['p50']):>9} {fmt(r['ttft']['p99']):>9} "
+                f"{fmt(r['tpot']['p50']):>9} {fmt(r['tpot']['p99']):>9}")
+        return "\n".join(lines)
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            close = getattr(sink, "close", None)
+            if close is not None:
+                close()

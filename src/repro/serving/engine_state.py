@@ -112,6 +112,40 @@ acquisition (`serving.prefill`):
   `admission.functional_qos.block_gate` (+ `block_headroom`), takes via
   the margin scan in `serving.prefill.chunk_plan`, and the submit-time
   ``demand ≤ pool`` ValueError closes the induction for newcomers.
+
+In-scan telemetry ring (observability without extra host syncs)
+---------------------------------------------------------------
+
+With ``ring_cap > 0`` the state carries a :class:`TelemetryRing`: every
+scanned round appends one fixed-shape :class:`TelemetrySample` inside the
+scan, and the host drains all K samples in the SAME single sync that
+drains the token/event buffers — per-round observability is free of
+round-trips by construction.  Each probe maps onto a paper construct:
+
+  * ``slot_free`` / ``credit`` / ``kv_free`` — the semaphore **value** at
+    each of the three granularities (free slots, per-tenant credit, KV
+    blocks), always read through the paper's counter identity
+    ``grant − ticket`` (wrap-safe signed distance), never a separate
+    gauge that could drift from the counters;
+  * ``kv_wait_hist`` — the **waiting-array occupancy** of the block
+    semaphore: how many parked slots observe each TWAHash bucket
+    (`core.functional.bucket_histogram`).  This is the paper's long-term
+    wait made visible — a flat histogram means the salt disperses
+    waiters (bounded re-checks per poke), a spike is hash aliasing;
+  * ``poke_dead`` — the per-tenant tombstone slack: how far the QoS
+    **poke window** over-covers live tickets (the skip-aware grant's
+    conservative wake range; `functional_qos.QoSState.dead`);
+  * ``kv_pokes`` — cumulative waiting-array pokes of the block semaphore
+    (``Σ bucket_seq``): the wake traffic a release fan-out generates;
+  * ``gate_stalls`` / ``parked`` — short-term (admission-time) vs
+    long-term (mid-sequence) block waiting, the two wait classes the
+    paper distinguishes.
+
+The central property extends the repo's spine invariant: the ring of
+``megastep(K)`` is **bit-identical** to the concatenation of the K
+per-step snapshots the host `ContinuousBatchingEngine.step()` assembles
+from its mirrors (tests/test_obs.py — kernel-QoS, paged, and chunked
+modes, incl. 2³² counter wrap).
 """
 
 from __future__ import annotations
@@ -132,6 +166,7 @@ from ..core.functional import (
     BlockPool,
     SemaState,
     _sdist,
+    bucket_histogram,
     make_block_pool,
     make_sema,
     pool_alloc,
@@ -147,6 +182,7 @@ from .prefill import (
     cdiv,
     chunk_plan,
     first_chunk_demand,
+    pending_prompt_tokens,
     total_block_demand,
 )
 
@@ -155,6 +191,12 @@ from .prefill import (
 # (bounded by outstanding grant ≪ backlog capacity), tenant index < 256.
 _D_CLAMP = 1 << 20
 _T_BITS = 8
+
+# waiting-array table width of the engine-owned semaphores (free-slot sema
+# AND the block pool) — also the width of the telemetry ring's occupancy
+# histogram.  The scheduler's host mirrors (`_kv_sema`, the host sample's
+# bincount) must use the SAME width for the bit-identity property.
+SLOT_TABLE = 64
 
 
 class Backlog(NamedTuple):
@@ -205,6 +247,111 @@ class KVPool(NamedTuple):
     tbl: jax.Array       # (S, MB) i32 — per-slot block ids, -1 = unallocated
 
 
+class TelemetrySample(NamedTuple):
+    """One engine round's end-of-round probe set (module docstring maps
+    each field to its paper construct).  Fixed-shape so a (R, …) ring of
+    them rides the scanned carry; every field is the value AFTER the
+    round's completion phase — exactly what the host `step()` path can
+    mirror from its own bookkeeping, making megastep(K)'s ring
+    bit-identical to K host snapshots."""
+
+    round_no: jax.Array         # i32 — global engine round index
+    now: jax.Array              # f32 — the round's clock (epoch-relative)
+    admits: jax.Array           # i32 — backlog rows granted a slot
+    expires: jax.Array          # i32 — backlog rows tombstoned (deadline)
+    preempts: jax.Array         # i32 — running slots deadline-preempted
+    tokens: jax.Array           # i32 — slots that emitted a token
+    prefill_tokens: jax.Array   # i32 — prompt tokens written this round
+    prefill_chunks: jax.Array   # i32 — slots that wrote a prompt chunk
+    prefill_pending: jax.Array  # i32 — prompt tokens still unprefilled
+    gate_stalls: jax.Array      # i32 — rows block-stalled at the gate
+    parked: jax.Array           # i32 — slots parked on the waiting array
+    backlog: jax.Array          # i32 — live backlog rows after the round
+    active: jax.Array           # i32 — busy slots after the round
+    slot_free: jax.Array        # i32 — free-slot sema grant − ticket
+    kv_free: jax.Array          # i32 — block sema grant − ticket (0 dense)
+    kv_pokes: jax.Array         # u32 — Σ block-sema bucket_seq (mod 2³²)
+    credit: jax.Array           # (T,) i32 — per-tenant grant − consumed
+    poke_dead: jax.Array        # (T,) u32 — per-tenant poke-window slack
+    kv_wait_hist: jax.Array     # (H,) i32 — waiting-array occupancy
+
+
+class TelemetryRing(NamedTuple):
+    """Fixed-capacity ring of :class:`TelemetrySample` carried through the
+    scan (capacity R = pow2 ≥ K, so one megastep never wraps and the pow2
+    mask arithmetic stays exact if a longer-lived ring ever does)."""
+
+    cursor: jax.Array      # i32 — next write index (monotonic)
+    buf: TelemetrySample   # every leaf has leading dim R
+
+
+def make_telemetry_ring(capacity: int, n_tenants: int,
+                        hist: int = SLOT_TABLE) -> TelemetryRing:
+    assert capacity > 0 and (capacity & (capacity - 1)) == 0, \
+        "ring capacity must be a power of two (wrap-safe cursor mask)"
+    R, T = capacity, n_tenants
+    z = jnp.zeros((R,), jnp.int32)
+    return TelemetryRing(
+        cursor=jnp.zeros((), jnp.int32),
+        buf=TelemetrySample(
+            round_no=z, now=jnp.zeros((R,), jnp.float32), admits=z,
+            expires=z, preempts=z, tokens=z, prefill_tokens=z,
+            prefill_chunks=z, prefill_pending=z, gate_stalls=z, parked=z,
+            backlog=z, active=z, slot_free=z, kv_free=z,
+            kv_pokes=jnp.zeros((R,), jnp.uint32),
+            credit=jnp.zeros((R, T), jnp.int32),
+            poke_dead=jnp.zeros((R, T), jnp.uint32),
+            kv_wait_hist=jnp.zeros((R, hist), jnp.int32)))
+
+
+def ring_append(ring: TelemetryRing, sample: TelemetrySample) -> TelemetryRing:
+    R = ring.buf.round_no.shape[0]
+    idx = ring.cursor & (R - 1)
+    return TelemetryRing(
+        cursor=ring.cursor + 1,
+        buf=jax.tree_util.tree_map(
+            lambda b, s: b.at[idx].set(s), ring.buf, sample))
+
+
+def ring_samples(ring, t0: float = 0.0) -> list:
+    """Host-side drain: the ring (already device_get, as part of the ONE
+    megastep sync) as a list of per-round dicts in round order, oldest
+    first — the exact record shape `ContinuousBatchingEngine.step()`
+    assembles per host round, so the two paths compare with ``==``.
+    ``t0`` re-anchors the epoch-relative round clocks to the engine's
+    absolute clock (``clock = t0 + now``)."""
+    import numpy as np
+
+    buf, n = ring.buf, int(ring.cursor)
+    R = np.asarray(buf.round_no).shape[0]
+    out = []
+    for i in range(max(n - R, 0), n):
+        k = i & (R - 1)
+        out.append({
+            "round": int(buf.round_no[k]),
+            "clock": float(t0) + float(buf.now[k]),
+            "admits": int(buf.admits[k]),
+            "expires": int(buf.expires[k]),
+            "preempts": int(buf.preempts[k]),
+            "tokens": int(buf.tokens[k]),
+            "prefill_tokens": int(buf.prefill_tokens[k]),
+            "prefill_chunks": int(buf.prefill_chunks[k]),
+            "prefill_pending": int(buf.prefill_pending[k]),
+            "gate_stalls": int(buf.gate_stalls[k]),
+            "parked": int(buf.parked[k]),
+            "backlog": int(buf.backlog[k]),
+            "active": int(buf.active[k]),
+            "slot_free": int(buf.slot_free[k]),
+            "kv_free": int(buf.kv_free[k]),
+            "kv_pokes": int(buf.kv_pokes[k]),
+            "credit": [int(c) for c in np.asarray(buf.credit[k])],
+            "poke_dead": [int(d) for d in np.asarray(buf.poke_dead[k])],
+            "kv_wait_hist": [int(h) for h in
+                             np.asarray(buf.kv_wait_hist[k])],
+        })
+    return out
+
+
 class EngineState(NamedTuple):
     """The donated on-device engine pytree carried through the scan."""
 
@@ -217,6 +364,7 @@ class EngineState(NamedTuple):
     kv: Optional[KVPool] = None  # block-paged KV pool (None = dense rings)
     stalls: Optional[jax.Array] = None  # i32 — cumulative parked slot-rounds
     chunks: Optional[jax.Array] = None  # i32 — cumulative prefill chunks
+    ring: Optional[TelemetryRing] = None  # in-scan telemetry (None = off)
 
 
 class RoundOut(NamedTuple):
@@ -241,13 +389,16 @@ AdmitFn = Optional[Callable]
 
 def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
                       prompt_cap: int, *, free_units=0,
-                      slot_table: int = 64, kv_blocks: int = 0,
-                      kv_slot_blocks: int = 0) -> EngineState:
+                      slot_table: int = SLOT_TABLE, kv_blocks: int = 0,
+                      kv_slot_blocks: int = 0,
+                      ring_cap: int = 0) -> EngineState:
     """Fresh device state (empty backlog, idle slots).  The scheduler
     refreshes backlog/slot rows from its host queues at each launch; the
     QoS state is the one source of truth shared with the host path.
     ``kv_blocks`` > 0 attaches a block-paged KV pool of that many blocks
-    (power of two) with ``kv_slot_blocks``-entry per-slot block tables."""
+    (power of two) with ``kv_slot_blocks``-entry per-slot block tables.
+    ``ring_cap`` > 0 (power of two ≥ the scan length) attaches the
+    in-scan :class:`TelemetryRing` (module docstring)."""
     assert backlog_cap >= n_slots, "backlog capacity must cover the slots"
     S, B, P = n_slots, backlog_cap, prompt_cap
     zb = jnp.zeros((B,), jnp.int32)
@@ -256,8 +407,13 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
         assert kv_slot_blocks > 0, "paged pool needs a per-slot table size"
         kv = KVPool(pool=make_block_pool(kv_blocks, table_size=slot_table),
                     tbl=jnp.full((S, kv_slot_blocks), -1, jnp.int32))
+    ring = None
+    if ring_cap:
+        ring = make_telemetry_ring(ring_cap, qos.ticket.shape[0],
+                                   hist=slot_table)
     return EngineState(
         kv=kv,
+        ring=ring,
         qos=qos,
         slot_sema=make_sema(count=n_slots, table_size=slot_table),
         free=jnp.asarray(free_units, jnp.int32),
@@ -528,17 +684,21 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
             commit_demand, commit_free, bootstrap = None, 0, False
 
         def _gate(args):
-            qos, admitted = args
+            qos, admitted, _ = args
             granted = block_gate(admitted, demand,
                                  _fcfs_key(bl, qos.grant, admitted),
                                  pool_free_count(state.kv.pool), headroom,
                                  commit_demand, commit_free, bootstrap)
             stalled = admitted & ~granted
-            return qos._replace(consumed=qos.consumed - segment_counts(
-                bl.tenant, stalled, qos.ticket.shape[0])), granted
+            return (qos._replace(consumed=qos.consumed - segment_counts(
+                bl.tenant, stalled, qos.ticket.shape[0])), granted,
+                jnp.sum(stalled.astype(jnp.int32)))
 
-        qos, admitted = jax.lax.cond(
-            jnp.any(admitted), _gate, lambda a: a, (qos, admitted))
+        qos, admitted, n_stall = jax.lax.cond(
+            jnp.any(admitted), _gate, lambda a: a,
+            (qos, admitted, jnp.int32(0)))
+    else:
+        n_stall = jnp.int32(0)
     rno = state.round_no
     bl = bl._replace(
         valid=alive & ~admitted & ~expired,
@@ -602,6 +762,39 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
                 pool=pool_release(kv.pool, kv.tbl, fin),
                 tbl=jnp.where(fin[:, None], -1, kv.tbl)),
             lambda kv: kv, state.kv))
+    # (6) telemetry: append this round's end-of-round probe set to the
+    # in-scan ring — same donated carry, zero extra host syncs.  Every
+    # field must stay mirrorable from the host `step()` bookkeeping (the
+    # bit-identity property of tests/test_obs.py) — extend both or
+    # neither.
+    if state.ring is not None:
+        parked_mask = sl.busy & sl.parked
+        sample = TelemetrySample(
+            round_no=rno,
+            now=now,
+            admits=jnp.sum(admitted.astype(jnp.int32)),
+            expires=jnp.sum(expired.astype(jnp.int32)),
+            preempts=n_pre,
+            tokens=jnp.sum(emit.astype(jnp.int32)),
+            prefill_tokens=jnp.sum(sl.chunk),
+            prefill_chunks=jnp.sum((sl.chunk > 0).astype(jnp.int32)),
+            prefill_pending=pending_prompt_tokens(sl.pos, sl.plen, sl.busy),
+            gate_stalls=n_stall,
+            parked=jnp.sum(parked_mask.astype(jnp.int32)),
+            backlog=jnp.sum(state.backlog.valid.astype(jnp.int32)),
+            active=jnp.sum(sl.busy.astype(jnp.int32)),
+            slot_free=_sdist(state.slot_sema.grant, state.slot_sema.ticket),
+            kv_free=(pool_free_count(state.kv.pool) if paged
+                     else jnp.int32(0)),
+            kv_pokes=(jnp.sum(state.kv.pool.sema.bucket_seq,
+                              dtype=jnp.uint32) if paged
+                      else jnp.uint32(0)),
+            credit=_sdist(state.qos.grant, state.qos.consumed),
+            poke_dead=state.qos.dead,
+            kv_wait_hist=bucket_histogram(
+                sl.park_bucket, parked_mask,
+                state.ring.buf.kv_wait_hist.shape[1]))
+        state = state._replace(ring=ring_append(state.ring, sample))
     ys = RoundOut(tokens=toks, emit=emit, fin=fin, pre=pre, row=finrow,
                   prerow=prerow,
                   n_live=jnp.sum(alive.astype(jnp.int32)),

@@ -94,6 +94,17 @@ def total_block_demand(prompt_len, max_new, block_size: int):
                             + jnp.asarray(max_new, jnp.int32), block_size), 1)
 
 
+def pending_prompt_tokens(pos: jax.Array, plen: jax.Array,
+                          busy: jax.Array) -> jax.Array:
+    """Prompt tokens still waiting to be prefilled across the busy slots —
+    the chunked-prefill backpressure gauge (how far the per-round token
+    budget is behind demand).  Decoding slots (``pos ≥ plen``) contribute
+    zero, so the same formula is correct in the up-front modes (where it
+    is identically 0).  i32 scalar."""
+    return jnp.sum(jnp.where(busy, jnp.maximum(
+        jnp.asarray(plen, jnp.int32) - jnp.asarray(pos, jnp.int32), 0), 0))
+
+
 def banker_order(rem: jax.Array, prio_round: jax.Array, prio_key: jax.Array,
                  active: jax.Array) -> jax.Array:
     """The canonical safety-chain permutation: ascending (remaining

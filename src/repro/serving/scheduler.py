@@ -94,6 +94,14 @@ class Request:
     enqueue_t: float = 0.0
     admit_t: float = 0.0
     finish_t: float = 0.0
+    # --- virtual-clock lifecycle stamps (repro.obs SLO tracking) ---
+    # Keyed on the injectable ``clock=`` (NOT wall time), so TTFT/TPOT are
+    # reproducible under virtual time and bit-identical between the host
+    # loop and megastep drains (which stamp t0 + nows[k] per round).
+    submit_clock: Optional[float] = None
+    first_tok_clock: Optional[float] = None
+    last_tok_clock: Optional[float] = None
+    finish_clock: Optional[float] = None
     admit_round: int = -1  # global engine round of admission
     expire_round: int = -1  # global engine round of expiry/preemption
     # --- continuous chunked prefill (kv_pool + chunked_prefill engines) ---
@@ -137,6 +145,7 @@ class ContinuousBatchingEngine:
         prompt_cap: int = 32,
         kv_pool: Optional[tuple] = None,
         chunked_prefill: Optional[tuple] = None,
+        obs=None,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -153,6 +162,26 @@ class ContinuousBatchingEngine:
         # tests (megastep ≡ host-loop property) can drive virtual time
         self._clock = clock
         self._round_no = 0  # global engine round counter (step & megastep)
+        # --- observability (repro.obs) ---
+        # ``obs=`` accepts anything with record_round(sample: dict) /
+        # record_request(req) / summary() — normally `repro.obs.EngineObs`.
+        # Per-round telemetry samples are produced by BOTH serving paths
+        # with identical keys and values: host `step()` mirrors every probe
+        # from its own bookkeeping, megastep drains the in-scan
+        # TelemetryRing in its ONE host sync (engine_state.py docstring).
+        self._obs = obs
+        self._last_samples: list[dict] = []  # most recent step/megastep
+        self._now_r = 0.0  # clock() at step start (lifecycle stamps)
+        # pure-host mirrors of the global slot semaphore's counters, so
+        # `telemetry()` never touches device arrays (a hidden host sync
+        # that `stats.host_syncs` would miss): takes bump the ticket,
+        # finish-posts bump the grant — queue_depth = ticket − grant.
+        self._sema_ticket_h = 0
+        self._sema_grant_h = n_slots
+        # per-round scratch the host sample mirrors from (reset each step)
+        self._round_gate_stalls = 0
+        self._round_prefill_tokens = 0
+        self._round_prefill_chunks = 0
         self._backlog_cap = backlog_cap  # megastep device backlog ceiling
         self._prompt_cap = prompt_cap  # megastep padded prompt ceiling
         self.megastep_model = None  # device model pytree (megastep mode)
@@ -247,6 +276,8 @@ class ContinuousBatchingEngine:
             return req
         req.enqueue_t = time.time()
         with self._lock:
+            req.submit_clock = self._clock()
+            self._sema_ticket_h += 1
             state, tickets, admitted, buckets = take_batch(
                 self.sema, jnp.ones((1,), bool)
             )
@@ -266,6 +297,8 @@ class ContinuousBatchingEngine:
             return
         with self._lock:
             n = len(reqs)
+            sclk = self._clock()
+            self._sema_ticket_h += n
             if self._use_kernel:
                 from ..kernels.ops import sema_batch as sema_kernel
 
@@ -278,6 +311,7 @@ class ContinuousBatchingEngine:
                 self.sema, tk, adm, bkt = take_batch(self.sema, jnp.ones((n,), bool))
             for r, t, b, a in zip(reqs, np.asarray(tk), np.asarray(bkt), np.asarray(adm)):
                 r.enqueue_t = time.time()
+                r.submit_clock = sclk
                 r.ticket = int(t)
                 r.bucket = int(b)
                 r.fast = bool(a)
@@ -342,6 +376,7 @@ class ContinuousBatchingEngine:
             for r, i, t, b, e in zip(reqs, ids, np.asarray(tickets),
                                      np.asarray(buckets), np.asarray(expired)):
                 r.enqueue_t = time.time()
+                r.submit_clock = now
                 if e:
                     self._expire_req(r, i)
                     continue
@@ -418,7 +453,17 @@ class ContinuousBatchingEngine:
             else:
                 stalled.append(i)
         if not self._chunk:
+            # up-front take: the host block-semaphore mirror's ticket
+            # advances by the total granted demand — the exact counter move
+            # the device `pool_alloc` makes at slot assignment, so
+            # `telemetry`'s kv probes (and the megastep bit-identity
+            # property) see the same semaphore state on both paths
+            taken = self._kv_free_blocks - free
             self._kv_free_blocks = free
+            if taken:
+                self._kv_sema = self._kv_sema._replace(
+                    ticket=self._kv_sema.ticket + jnp.uint32(taken))
+        self._round_gate_stalls += len(stalled)
         return granted, stalled
 
     def _kv_first_chunk(self, r: Request) -> int:
@@ -470,6 +515,9 @@ class ContinuousBatchingEngine:
         self.stats.expired += 1
         self.tenant_expired[self._tenant_names[tidx]] += 1
         r.finish_t = time.time()
+        if r.finish_clock is None:  # megastep drains pre-stamp per-round
+            r.finish_clock = self._clock()
+        self._obs_done(r)
         r.done_event.set()
 
     def _expire_due_qos(self) -> None:
@@ -692,6 +740,7 @@ class ContinuousBatchingEngine:
         same slot-release path, different accounting."""
         req = self.active.pop(slot)
         req.finish_t = time.time()
+        req.finish_clock = self._now_r
         self.free_slots.append(slot)
         if reason == "deadline":
             req.expired = True
@@ -717,8 +766,14 @@ class ContinuousBatchingEngine:
             else:
                 # the sequence's worst-case block reservation posts back —
                 # the host counter mirrors the device block semaphore's
-                # `post`
+                # `post`, and the semaphore mirror pokes the waiting-array
+                # buckets of the enabled range (sequential per-slot posts
+                # bump the same buckets as the device's one batched
+                # `pool_release` — poke ranges tile [grant, grant+Σ), and
+                # bucket bumps commute)
                 self._kv_free_blocks += self._kv_demand(req)
+                self._kv_sema = post_batch(self._kv_sema,
+                                           self._kv_demand(req))
         # slot freed → post: advances grant AND pokes the bucket of the next
         # waiting ticket (successor staging — the paper's SemaPost).  In QoS
         # mode the freed slot instead re-enters the weighted replenishment.
@@ -726,7 +781,9 @@ class ContinuousBatchingEngine:
             self._replenish_qos(1)
         else:
             self.sema = post_batch(self.sema, 1)
+            self._sema_grant_h += 1
         self.stats.wakeups += 1
+        self._obs_done(req)
         req.done_event.set()
         self._client_sem.post()
 
@@ -754,7 +811,16 @@ class ContinuousBatchingEngine:
                 "through ONE of the two paths)")
         with self._lock:
             rnd = self._round_no
+            # ONE nominal host sync per step (the paired megastep counts 1
+            # per K rounds); `telemetry()` and sample recording are pure
+            # host-side reads and must never bump this
             self.stats.host_syncs += 1
+            now_r = self._now_r = self._clock()
+            self._round_gate_stalls = 0
+            self._round_prefill_tokens = 0
+            self._round_prefill_chunks = 0
+            a0, e0, p0 = (self.stats.admitted, self.stats.expired,
+                          self.stats.preempted)
             self._preempt_expired()
             for req in self._admit_ready():
                 slot = self.free_slots.pop()
@@ -774,6 +840,8 @@ class ContinuousBatchingEngine:
 
             if not self.active:
                 self._round_no = rnd + 1
+                self._record_round(self._host_sample(rnd, now_r, a0, e0,
+                                                     p0, 0))
                 return 0
             self.stats.steps += 1
             if self._chunk:
@@ -787,11 +855,16 @@ class ContinuousBatchingEngine:
                 done_slots = []
                 for (slot, req), tok in zip(decode, next_tokens):
                     req.out_tokens.append(int(tok))
+                    if req.first_tok_clock is None:
+                        req.first_tok_clock = now_r
+                    req.last_tok_clock = now_r
                     if len(req.out_tokens) >= req.max_new_tokens:
                         done_slots.append(slot)
                 for slot in done_slots:
                     self._finish(slot, "length")
             self._round_no = rnd + 1
+            self._record_round(self._host_sample(rnd, now_r, a0, e0, p0,
+                                                 len(decode)))
             return len(self.active)
 
     def _chunk_step(self) -> np.ndarray:
@@ -862,6 +935,8 @@ class ContinuousBatchingEngine:
                     self.prefill_fn(r)  # last chunk landed: full KV ready
         self.stats.prefill_chunks += int((tokens > 0).sum())
         self.stats.kv_block_stalls += int(parked_o.sum())
+        self._round_prefill_tokens = int(tokens.sum())
+        self._round_prefill_chunks = int((tokens > 0).sum())
         return np.flatnonzero(np.asarray(plan.emit))
 
     # ----------------------------------------------------------- megastep ---
@@ -971,7 +1046,10 @@ class ContinuousBatchingEngine:
             state = make_engine_state(
                 self.qos, S, B, P, free_units=self._qos_free,
                 kv_blocks=self._kv_blocks if fresh_kv else 0,
-                kv_slot_blocks=self._kv_mb if fresh_kv else 0)
+                kv_slot_blocks=self._kv_mb if fresh_kv else 0,
+                # in-scan telemetry ring: pow2 ≥ K so one launch never
+                # wraps (pow2 also buckets the compile cache with K)
+                ring_cap=_next_pow2(K))
             if paged and not fresh_kv:
                 # block semaphore + tables persist launch-to-launch (the
                 # pool's identity mapping must survive with the model KV);
@@ -1121,6 +1199,12 @@ class ContinuousBatchingEngine:
                     self._tenant_live[tidx] -= 1
                     gone.add(id(r))
                 elif st_h.backlog.expire_round[i] >= 0:
+                    # stamp the tombstone's round clock BEFORE _expire_req
+                    # so its obs event carries the in-scan expiry time, not
+                    # the drain-time clock
+                    r.expire_round = int(st_h.backlog.expire_round[i])
+                    r.finish_clock = t0 + float(
+                        nows_a[r.expire_round - base])
                     self._expire_req(r, tidx)
                     r.expire_round = int(st_h.backlog.expire_round[i])
                     self._tenant_live[tidx] -= 1
@@ -1131,26 +1215,34 @@ class ContinuousBatchingEngine:
                         r for r in q if id(r) not in gone)
 
             for k in range(K):
+                tk = t0 + float(nows_a[k])  # round k's clock (absolute)
                 for s in np.flatnonzero(ys_h.pre[k]):
                     r = req_of(int(ys_h.prerow[k][s]))
                     r.expired = True
                     r.preempted = True
                     r.expire_round = base + k
                     r.finish_t = time.time()
+                    r.finish_clock = tk
                     self.stats.preempted += 1
                     self.stats.expired += 1
                     self.tenant_expired[r.tenant_id] += 1
                     self.stats.wakeups += 1
+                    self._obs_done(r)
                     r.done_event.set()
                     self._client_sem.post()
                 for s in np.flatnonzero(ys_h.emit[k]):
-                    req_of(int(ys_h.row[k][s])).out_tokens.append(
-                        int(ys_h.tokens[k][s]))
+                    r = req_of(int(ys_h.row[k][s]))
+                    r.out_tokens.append(int(ys_h.tokens[k][s]))
+                    if r.first_tok_clock is None:
+                        r.first_tok_clock = tk
+                    r.last_tok_clock = tk
                 for s in np.flatnonzero(ys_h.fin[k]):
                     r = req_of(int(ys_h.row[k][s]))
                     r.finish_t = time.time()
+                    r.finish_clock = tk
                     self.stats.finished += 1
                     self.stats.wakeups += 1
+                    self._obs_done(r)
                     r.done_event.set()
                     self._client_sem.post()
             self.stats.steps += int((ys_h.n_active > 0).sum())
@@ -1178,15 +1270,16 @@ class ContinuousBatchingEngine:
                 self._kv_free_blocks = int(np.int32(
                     np.uint32(st_h.kv.pool.sema.grant)
                     - np.uint32(st_h.kv.pool.sema.ticket)))
+                # the host block-semaphore mirror resyncs to the device
+                # counters/buckets in BOTH paged modes (it feeds the
+                # kv_pokes telemetry probe) — mixed step()/megastep
+                # serving raises above, but the mirror must never be
+                # allowed to go stale against carried park state
+                self._kv_sema = st.kv.pool.sema
             if chunked:
                 # carry each still-running request's prefill/park state to
                 # the next launch (the device pool itself persists in
-                # _kv_state; this is the per-request view of it).  The
-                # host block-semaphore mirror also resyncs to the device
-                # counters/buckets — unreachable today (mixed step()/
-                # megastep serving raises above), but the mirror must
-                # never be allowed to go stale against carried park state
-                self._kv_sema = st.kv.pool.sema
+                # _kv_state; this is the per-request view of it)
                 tbl_h = np.asarray(st_h.kv.tbl)
                 for s, r in self.active.items():
                     r.prefill_pos = int(st_h.slots.pos[s])
@@ -1197,18 +1290,118 @@ class ContinuousBatchingEngine:
                     r.kv_blocks = int((tbl_h[s] >= 0).sum())
                 self.stats.kv_block_stalls = int(st_h.stalls)
                 self.stats.prefill_chunks = int(st_h.chunks)
+            # drain the in-scan telemetry ring — part of the SAME device_get
+            # above, so observability adds no host sync (host_syncs stays 1
+            # per megastep; tests/test_obs.py pins this)
+            from .engine_state import ring_samples
+
+            self._last_samples = ring_samples(st_h.ring, t0=t0)
+            if self._obs is not None:
+                for smp in self._last_samples:
+                    self._obs.record_round(smp)
             self._round_no = base + K
             return int(st_h.slots.busy.sum())
 
     # ---------------------------------------------------------- telemetry ---
 
+    def _obs_done(self, r: Request) -> None:
+        """Feed a resolved request (finished, tombstoned, or preempted)
+        into the attached observability layer — the per-request TTFT/TPOT
+        event stream of `repro.obs.EngineObs.record_request`."""
+        if self._obs is not None:
+            self._obs.record_request(r)
+
+    def _record_round(self, sample: dict) -> None:
+        self._last_samples = [sample]
+        if self._obs is not None:
+            self._obs.record_round(sample)
+
+    def _host_sample(self, rnd: int, now_r: float, a0: int, e0: int,
+                     p0: int, n_tok: int) -> dict:
+        """Assemble the host `step()` round's telemetry sample — the SAME
+        record (keys and values) `engine_state.ring_samples` drains from a
+        megastep's in-scan :class:`TelemetryRing`, mirrored purely from the
+        host bookkeeping.  The bit-identity property of tests/test_obs.py
+        compares these with ``==`` across K rounds; extend both sides or
+        neither (see `engine_state.TelemetrySample`)."""
+        from .engine_state import SLOT_TABLE
+
+        if self._tenants is not None:
+            # wrap-safe per-tenant credit: u32 difference re-read as i32
+            # (the _sdist of core.functional — value survives 2³² wrap)
+            credit = (np.asarray(self.qos.grant)
+                      - np.asarray(self.qos.consumed)).view(np.int32)
+            dead = np.asarray(self.qos.dead)
+            backlog = int(self._tenant_live.sum())
+        else:
+            credit = np.zeros(0, np.int32)
+            dead = np.zeros(0, np.uint32)
+            backlog = len(self.backlog)
+        paged = self._kv_pool is not None
+        hist = np.zeros(SLOT_TABLE, np.int64)
+        parked = pending = 0
+        for r in self.active.values():
+            if r.parked:
+                parked += 1
+                hist[r.park_bucket] += 1
+            if self._chunk:
+                plen = min(len(r.prompt), self._prompt_cap) or 1
+                pending += max(plen - r.prefill_pos, 0)
+        return {
+            "round": rnd,
+            "clock": float(now_r),
+            "admits": self.stats.admitted - a0,
+            "expires": (self.stats.expired - e0)
+            - (self.stats.preempted - p0),
+            "preempts": self.stats.preempted - p0,
+            "tokens": n_tok,
+            "prefill_tokens": self._round_prefill_tokens,
+            "prefill_chunks": self._round_prefill_chunks,
+            "prefill_pending": pending,
+            "gate_stalls": self._round_gate_stalls,
+            "parked": parked,
+            "backlog": backlog,
+            "active": len(self.active),
+            "slot_free": len(self.free_slots),
+            "kv_free": int(self._kv_free_blocks) if paged else 0,
+            "kv_pokes": (int(np.sum(np.asarray(self._kv_sema.bucket_seq),
+                                    dtype=np.uint32)) if paged else 0),
+            "credit": [int(c) for c in credit],
+            "poke_dead": [int(d) for d in dead],
+            "kv_wait_hist": [int(h) for h in hist],
+        }
+
     def telemetry(self) -> dict:
+        """Gauge snapshot of the engine — pure host-side reads.
+
+        Contract:
+
+        * **No hidden host syncs.**  Every gauge comes off host bookkeeping
+          (the counter mirrors) — calling ``telemetry()`` never transfers
+          device arrays and never bumps ``stats.host_syncs``; the per-round
+          sample streams (`last_samples`, the megastep TelemetryRing drain)
+          ride the serving paths' own single sync.
+        * **``pool_utilization`` is ALWAYS present**: a float in [0, 1]
+          (blocks actually holding tokens / pool) for block-paged engines,
+          and exactly ``None`` for dense engines — callers branch on the
+          value, never on key presence.  The other block-pool gauges
+          (``kv_blocks_free``, ``kv_blocks_live``, ``kv_block_stalls``,
+          ``prefill_chunks``, ``parked_slots``) remain paged-only keys.
+        * ``last_samples`` is the most recent serving call's per-round
+          telemetry: ONE sample for a host ``step()``, K ring samples for a
+          ``megastep(K)`` — identical record shape either way
+          (`engine_state.ring_samples`).
+        * With an ``obs=`` layer attached, ``slo`` carries its per-tenant
+          TTFT/TPOT/attainment summary (`repro.obs.EngineObs.summary`).
+        """
         tel = {
             "backlog": len(self.backlog),
             "active": len(self.active),
             "free_slots": len(self.free_slots),
-            "queue_depth": max(0, int(self.sema.ticket) - int(self.sema.grant)),
+            "queue_depth": max(0, self._sema_ticket_h - self._sema_grant_h),
             "stats": self.stats.__dict__.copy(),
+            "pool_utilization": None,  # dense: no pool (see docstring)
+            "last_samples": list(self._last_samples),
         }
         if self._kv_pool is not None:
             # block-pool gauges (the block semaphore's counter identity):
@@ -1245,4 +1438,6 @@ class ContinuousBatchingEngine:
                     "queue_depth": int(self._tenant_live[self._tindex[t]])}
                 for t in self._tenant_names
             }
+        if self._obs is not None:
+            tel["slo"] = self._obs.summary()
         return tel

@@ -1,0 +1,386 @@
+"""Observability layer (PR 6) — the in-scan telemetry ring and `repro.obs`.
+
+  * tentpole property: ``megastep(K)``'s TelemetryRing drains to records
+    BIT-IDENTICAL to the concatenation of K host ``step()`` samples —
+    every probe including the waiting-array occupancy histogram and the
+    three grant−ticket backlogs — across kernel-QoS, block-paged, and
+    chunked-prefill modes, deadline preemption, park/resume, and 2³²
+    counter wrap (hypothesis);
+  * acceptance: a megastep with the ring enabled remains ONE host sync
+    (``stats.host_syncs``), and ``telemetry()`` is pure host-side reads
+    (never bumps the counter);
+  * satellite: ``pool_utilization`` is always present — ``None`` for
+    dense engines, a float for paged ones (the documented contract);
+  * request lifecycle clocks (submit/first/last/finish) agree between the
+    two serving paths, so per-tenant SLO summaries match;
+  * `repro.obs` units: LogHistogram quantiles vs a full-sample numpy
+    oracle, RollingMedian vs a naive window median, sink fan-out.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.obs import (
+    CallbackSink,
+    EngineObs,
+    JsonlSink,
+    LogHistogram,
+    RollingMedian,
+    StdoutSink,
+)
+from repro.serving.engine_state import rid_token_fn
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+import test_chunked_prefill as tcp
+import test_megastep as tms
+import test_paged_pool as tpp
+
+DT = tms.DT
+_IDENT = tms._IDENT
+
+_SAMPLE_KEYS = {
+    "round", "clock", "admits", "expires", "preempts", "tokens",
+    "prefill_tokens", "prefill_chunks", "prefill_pending", "gate_stalls",
+    "parked", "backlog", "active", "slot_free", "kv_free", "kv_pokes",
+    "credit", "poke_dead", "kv_wait_hist",
+}
+
+_CLOCK_FIELDS = ("submit_clock", "first_tok_clock", "last_tok_clock",
+                 "finish_clock")
+
+
+def _drive_pair(eh, em, rh, rm, K, *, obs_pair=None):
+    """Drive identical workloads through K host steps vs one megastep(K);
+    return (host samples, mega samples)."""
+    eh.submit_batch(rh)
+    em.submit_batch(rm)
+    times = [k * DT for k in range(K)]
+    host_samples = []
+    for t in times:
+        eh._clock_box[0] = t
+        eh.step(_IDENT)
+        host_samples.extend(eh.telemetry()["last_samples"])
+    em._clock_box[0] = 0.0
+    em.megastep(K, token_fn=rid_token_fn,
+                nows=np.asarray(times, np.float32))
+    mega_samples = em.telemetry()["last_samples"]
+    return host_samples, mega_samples
+
+
+def _mk_pair(mk, **kw):
+    """Two identical engines on independent virtual clocks; the clock box
+    is stashed on the engine so _drive_pair can advance them separately."""
+    out = []
+    for _ in range(2):
+        clk = [0.0]
+        eng = mk(clk, **kw)
+        eng._clock_box = clk
+        out.append(eng)
+    return out
+
+
+def _assert_bit_identical(hs, ms, K, tag=""):
+    assert len(hs) == K and len(ms) == K, (tag, len(hs), len(ms))
+    for k, (a, b) in enumerate(zip(hs, ms)):
+        assert set(a) == set(b) == _SAMPLE_KEYS, (tag, k)
+        for key in _SAMPLE_KEYS:
+            assert a[key] == b[key], (tag, k, key, a[key], b[key])
+
+
+def _assert_clocks_equal(rh, rm, tag=""):
+    for a, b in zip(rh, rm):
+        for f in _CLOCK_FIELDS:
+            assert getattr(a, f) == getattr(b, f), \
+                (tag, a.rid, f, getattr(a, f), getattr(b, f))
+
+
+# ------------------------------------------- tentpole: ring ≡ K snapshots ---
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.5]),
+       st.booleans())
+def test_telemetry_ring_equals_host_snapshots_qos(seed, frac, wrap):
+    """Kernel-QoS mode: megastep(K) ring ≡ K step() samples, bit-identical
+    (incl. per-tenant credit vectors and poke-window slack through wrap)."""
+    K, n_req = 12, 18
+    eh, em = _mk_pair(tms._mk_engine, wrap=wrap)
+    hs, ms = _drive_pair(eh, em, tms._workload(seed, n_req, frac),
+                         tms._workload(seed, n_req, frac), K)
+    _assert_bit_identical(hs, ms, K, f"qos seed={seed}")
+    assert eh.stats.host_syncs == K and em.stats.host_syncs == 1
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.5]),
+       st.booleans())
+def test_telemetry_ring_equals_host_snapshots_paged(seed, frac, wrap):
+    """Block-paged mode: the ring's kv_free / kv_pokes / gate_stalls
+    probes mirror the host block-semaphore counters exactly — the up-front
+    host mirror advances its ticket at the gate and posts (with
+    waiting-array pokes) at completion, exactly like the device pool."""
+    K, n_req = 14, 16
+    eh, em = _mk_pair(tpp._mk_engine, kv_pool=(16, 4), wrap=wrap)
+    rh = tpp._workload(seed, n_req, frac)
+    rm = tpp._workload(seed, n_req, frac)
+    hs, ms = _drive_pair(eh, em, rh, rm, K)
+    _assert_bit_identical(hs, ms, K, f"paged seed={seed}")
+    _assert_clocks_equal(rh, rm, f"paged seed={seed}")
+    assert em.stats.host_syncs == 1
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.0, 0.5]),
+       st.booleans())
+def test_telemetry_ring_equals_host_snapshots_chunked(seed, frac, wrap):
+    """Chunked-prefill mode: prefill_tokens/chunks/pending, parked, and
+    the waiting-array occupancy histogram (the paper's long-term-wait
+    observable) stay bit-identical through park/resume cycles."""
+    K, n_req = 18, 14
+    eh, em = _mk_pair(tcp._mk_chunked, wrap=wrap)
+    rh = tcp._workload(seed, n_req, frac)
+    rm = tcp._workload(seed, n_req, frac)
+    hs, ms = _drive_pair(eh, em, rh, rm, K)
+    _assert_bit_identical(hs, ms, K, f"chunked seed={seed}")
+    _assert_clocks_equal(rh, rm, f"chunked seed={seed}")
+    # parks occurred somewhere in the run → the occupancy histogram is a
+    # live probe, not structurally zero
+    if any(s["parked"] for s in hs):
+        assert any(sum(s["kv_wait_hist"]) > 0 for s in hs)
+
+
+def test_ring_probes_reflect_waiting_array():
+    """Deterministic spot-check: when slots park on the block semaphore,
+    the ring's kv_wait_hist counts exactly the parked slots' buckets and
+    kv_pokes moves when releases poke the array."""
+    clk = [0.0]
+    eng = tcp._mk_chunked(clk)
+    reqs = [Request(rid=i, prompt=[2] * 17, max_new_tokens=6,
+                    tenant_id=["gold", "bronze"][i % 2])
+            for i in range(8)]
+    eng.submit_batch(reqs)
+    K = 20
+    times = np.asarray([k * DT for k in range(K)], np.float32)
+    eng.megastep(K, token_fn=rid_token_fn, nows=times)
+    samples = eng.telemetry()["last_samples"]
+    assert len(samples) == K
+    for s in samples:
+        assert sum(s["kv_wait_hist"]) == s["parked"]
+    assert any(s["parked"] > 0 for s in samples)  # parks actually occurred
+    assert samples[-1]["kv_pokes"] > 0            # releases poked buckets
+
+
+# --------------------------------------------- acceptance: sync accounting --
+
+
+def test_megastep_with_ring_is_one_host_sync():
+    """ISSUE acceptance: enabling the ring adds no host sync — megastep(K)
+    stays at host_syncs == 1 and the drained samples ride that sync; a
+    `telemetry()` call (pure host reads) never bumps the counter."""
+    clk = [0.0]
+    eng = tms._mk_engine(clk)
+    eng.submit_batch(tms._workload(3, 12, 0.0))
+    eng.megastep(10, token_fn=rid_token_fn,
+                 nows=np.asarray([k * DT for k in range(10)], np.float32))
+    assert eng.stats.host_syncs == 1
+    before = eng.stats.host_syncs
+    tel = eng.telemetry()
+    assert len(tel["last_samples"]) == 10
+    assert eng.stats.host_syncs == before  # telemetry is sync-free
+    assert tel["stats"]["host_syncs"] == before
+
+
+def test_host_step_records_one_sample_per_round():
+    clk = [0.0]
+    eng = tms._mk_engine(clk)
+    eng.submit_batch(tms._workload(7, 6, 0.0))
+    seen = []
+    for k in range(8):
+        clk[0] = k * DT
+        eng.step(_IDENT)
+        samples = eng.telemetry()["last_samples"]
+        assert len(samples) == 1 and samples[0]["round"] == k
+        seen.append(samples[0])
+    assert [s["round"] for s in seen] == list(range(8))
+    assert eng.stats.host_syncs == 8
+
+
+# ------------------------------------------ satellite: pool_utilization -----
+
+
+def test_pool_utilization_contract():
+    """`telemetry()['pool_utilization']` is ALWAYS present: None for dense
+    engines (no pool), float for paged ones — callers branch on the value,
+    never on key presence (the documented contract)."""
+    clk = [0.0]
+    dense = tms._mk_engine(clk)
+    tel = dense.telemetry()
+    assert "pool_utilization" in tel and tel["pool_utilization"] is None
+    assert "kv_blocks_free" not in tel  # pool gauges stay paged-only
+
+    paged = tpp._mk_engine(clk, kv_pool=(16, 4))
+    tel = paged.telemetry()
+    assert isinstance(tel["pool_utilization"], float)
+    assert tel["pool_utilization"] == 0.0  # fresh pool: nothing written
+
+    # non-QoS dense engine takes the same contract path
+    basic = ContinuousBatchingEngine(tms._rid_step_fn, lambda r: None, 2)
+    assert basic.telemetry()["pool_utilization"] is None
+
+
+# --------------------------------------------------- SLO / EngineObs layer --
+
+
+def test_slo_summary_host_equals_megastep():
+    """Attach an EngineObs to both serving paths: identical sample streams
+    and lifecycle clocks ⇒ identical per-tenant SLO summaries."""
+    obs_h = EngineObs(ttft_target=2.0)
+    obs_m = EngineObs(ttft_target=2.0)
+    eh, em = _mk_pair(tms._mk_engine)
+    eh._obs, em._obs = obs_h, obs_m
+    K = 12
+    rh = tms._workload(5, 18, 0.5)
+    rm = tms._workload(5, 18, 0.5)
+    hs, ms = _drive_pair(eh, em, rh, rm, K)
+    _assert_bit_identical(hs, ms, K, "slo")
+    _assert_clocks_equal(rh, rm, "slo")
+    sh, sm = obs_h.summary(), obs_m.summary()
+    assert sh["rounds"] == sm["rounds"] == K
+    # resolved requests may differ only by the still-running tail; compare
+    # the tenants both saw
+    for t in set(sh["tenants"]) & set(sm["tenants"]):
+        assert sh["tenants"][t] == sm["tenants"][t], t
+    assert eh.telemetry()["slo"] == sh
+    assert em.telemetry()["slo"] == sm
+
+
+def test_engine_obs_ttft_tpot_math():
+    """TTFT/TPOT definitions, straight from the lifecycle clocks."""
+
+    class R:  # minimal duck-typed resolved request
+        tenant_id = "gold"
+        out_tokens = [1, 2, 3, 4, 5]
+        expired = False
+        preempted = False
+        submit_clock = 1.0
+        first_tok_clock = 3.0
+        last_tok_clock = 5.0
+
+    obs = EngineObs(ttft_target=2.5)
+    obs.record_request(R())
+    s = obs.summary()["tenants"]["gold"]
+    assert s["finished"] == 1 and s["expired"] == 0
+    assert abs(s["ttft"]["p50"] - 2.0) / 2.0 <= 0.011  # ±resolution
+    assert abs(s["tpot"]["p50"] - 0.5) / 0.5 <= 0.011  # (5-3)/(5-1)
+    assert s["attainment"] == 1.0
+
+    class Miss(R):
+        first_tok_clock = 9.0
+        last_tok_clock = 9.0
+        out_tokens = [1]
+
+    obs.record_request(Miss())
+    s = obs.summary()["tenants"]["gold"]
+    assert s["attainment"] == 0.5  # TTFT 8.0 > target 2.5
+
+    class Dead(R):
+        expired = True
+        preempted = True
+
+    obs.record_request(Dead())
+    s = obs.summary()["tenants"]["gold"]
+    assert s["expired"] == 1 and s["preempted"] == 1
+    assert s["attainment"] == 1 / 3
+    table = obs.render_table()
+    assert "gold" in table and "attain" in table
+
+
+# ------------------------------------------------------- obs unit pieces ----
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.05, 0.01]))
+def test_log_histogram_vs_numpy_oracle(seed, res):
+    """Any quantile of the streaming histogram is within ±resolution
+    relative error of the full-sample numpy percentile."""
+    rng = np.random.default_rng(seed)
+    # lognormal: heavy tail spanning several decades — the regime the
+    # geometric buckets exist for
+    xs = rng.lognormal(mean=0.0, sigma=2.0, size=2000)
+    h = LogHistogram(resolution=res)
+    for x in xs:
+        h.add(float(x))
+    for q in (0.5, 0.9, 0.99, 0.999):
+        est = h.quantile(q)
+        true = float(np.quantile(xs, q))
+        assert est <= h.max and est >= h.min
+        assert abs(est - true) / true <= res + 1e-9, (q, est, true)
+    assert h.count == len(xs)
+    assert abs(h.mean - xs.mean()) / xs.mean() < 1e-9
+    assert h.quantile(0.0) == xs.min() and h.quantile(1.0) == xs.max()
+
+
+def test_log_histogram_merge():
+    a, b = LogHistogram(), LogHistogram()
+    xs = [0.1, 1.0, 2.0]
+    ys = [5.0, 50.0]
+    for x in xs:
+        a.add(x)
+    for y in ys:
+        b.add(y)
+    a.merge(b)
+    assert a.count == 5 and a.max == 50.0 and a.min == 0.1
+    c = LogHistogram()
+    for v in xs + ys:
+        c.add(v)
+    assert a.quantile(0.5) == c.quantile(0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 12))
+def test_rolling_median_vs_naive(seed, window):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=60)
+    rm = RollingMedian(window)
+    for i, x in enumerate(xs):
+        got = rm.push(float(x))
+        want = float(np.median(xs[max(0, i + 1 - window):i + 1]))
+        assert got == want, (i, got, want)
+    assert rm.value == want
+    rm.reset()
+    assert math.isnan(rm.value)
+
+
+def test_sinks_fan_out(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    got = []
+    obs = EngineObs([JsonlSink(str(path)), CallbackSink(got.append),
+                     StdoutSink(prefix="# ")], smooth_window=3)
+    for k in range(5):
+        obs.record_round({"round": k, "tokens": k % 2, "active": 1,
+                          "kv_free": 10 - k, "prefill_tokens": 0})
+    obs.close()
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == len(got) == 5
+    assert [r["round"] for r in lines] == list(range(5))
+    # rolling-median companion trace rides each record
+    assert lines[-1]["smoothed"]["kv_free"] == 7  # median(8, 7, 6)
+    assert got[0]["smoothed"]["tokens"] == 0  # first value echoes
+
+
+def test_callback_sink_filter():
+    got = []
+    sink = CallbackSink(got.append, filter=lambda r: r["tokens"] > 0)
+    sink.emit({"tokens": 0})
+    sink.emit({"tokens": 3})
+    assert got == [{"tokens": 3}] and sink.emitted == 1
