@@ -14,7 +14,15 @@ one continuous-batching engine, demonstrating
 Run:  PYTHONPATH=src python examples/serve_multitenant.py [--kernel]
                                                           [--megastep]
                                                           [--paged]
+                                                          [--chaos [seed]]
                                                           [--trace]
+
+Self-healing (``--chaos [seed]``): drives a chunked block-paged engine
+through a seeded `repro.resilience.FaultPlan` (dropped pokes, counter
+corruption, wedged slots, one mid-run crash) under the recovery ladder —
+watchdog quarantine + backoff requeue, block-table audit, snapshot
+restore + deterministic replay — printing every ladder action and the
+exit conservation audit.  See src/repro/resilience/README.md.
 
 Observability (``--trace``): attaches a `repro.obs.EngineObs` with a
 streaming `JsonlSink` — every engine round (host ``step()`` or megastep
@@ -150,6 +158,70 @@ def main_paged(K: int = 16, trace: bool = False) -> None:
     print("[example] block-paged KV pool admission + decode OK")
 
 
+def main_chaos(seed: int = 0, K: int = 8, trace: bool = False) -> None:
+    """Self-healing demo (``--chaos [seed]``): a chunked block-paged
+    engine with the in-scan sentinels armed is driven through a seeded
+    `repro.resilience.FaultPlan` — dropped wake pokes, counter
+    corruption, wedged slots, plus one mid-run crash — by the
+    `ResilientEngine` recovery ladder: watchdog quarantine + jittered
+    requeue, block-table audit-and-rebuild, snapshot/restore with
+    deterministic replay.  Every request still drains and the exit
+    audit proves conservation at all three semaphore granularities."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import CAPACITY_KINDS, FaultPlan, ResilientEngine
+    from repro.serving.engine_state import rid_token_fn
+
+    clk = [0.0]
+    trace_path = "trace_multitenant.jsonl"
+    obs = _make_obs(trace, trace_path, ttft_target=30.0)
+    eng = ContinuousBatchingEngine(
+        lambda a: np.array([r.rid * 1000 + len(r.out_tokens)
+                            for r in a], np.int64),
+        lambda r: None, n_slots=4, tenants={"gold": 2.0, "bronze": 1.0},
+        clock=lambda: clk[0], kv_pool=(16, 4), chunked_prefill=(5, 9, 16),
+        prompt_cap=32, watchdog=4, obs=obs)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, prompt=[1 + i % 7] * int(rng.integers(1, 19)),
+                    max_new_tokens=1 + int(rng.integers(0, 10)),
+                    tenant_id=("gold", "bronze")[int(rng.integers(0, 2))])
+            for i in range(12)]
+    plan = FaultPlan.random(seed, rounds=24, n_faults=4,
+                            kinds=CAPACITY_KINDS).with_crash(11)
+    with tempfile.TemporaryDirectory() as ckdir:
+        rz = ResilientEngine(eng, plan=plan, react_every=2, retry_budget=2,
+                             seed=seed, ckpt=CheckpointManager(ckdir),
+                             snapshot_every=8)
+        eng.submit_batch(reqs)
+        spent = 0
+        while spent < 240 and not (
+                all(r.done_event.is_set() for r in reqs)
+                and not rz._retryq and not eng.active):
+            base = eng._round_no
+            rz.megastep(K, token_fn=rid_token_fn,
+                        nows=np.asarray([(base + k) * 0.25
+                                         for k in range(K)], np.float32))
+            spent += K
+        print(f"[chaos] plan seed={seed}: "
+              + ", ".join(f"r{e.round}:{e.kind}" for e in plan.events))
+        for e in rz.events:
+            extra = {k: v for k, v in e.items()
+                     if k not in ("round", "action")}
+            print(f"[chaos]   round {e['round']:>3} {e['action']:<12} "
+                  f"{extra if extra else ''}")
+        rec = rz.telemetry()["recovery"]
+        print(f"[chaos] recovery counters: {rec}")
+        audit = rz.audit()
+        assert all(r.done_event.is_set() for r in reqs), \
+            "chaos run failed to drain"
+        assert audit["ok"], audit["violations"]
+        _finish_trace(obs, trace_path)
+        print("[example] fault injection + recovery ladder OK "
+              f"(drained {len(reqs)} requests under {len(plan.events)} "
+              "injected faults, exit audit clean)")
+
+
 def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16,
          trace: bool = False):
     trace_path = "trace_multitenant.jsonl"
@@ -211,7 +283,11 @@ def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16,
 
 if __name__ == "__main__":
     trace = "--trace" in sys.argv[1:]
-    if "--paged" in sys.argv[1:]:
+    if "--chaos" in sys.argv[1:]:
+        rest = sys.argv[sys.argv.index("--chaos") + 1:]
+        main_chaos(seed=int(rest[0]) if rest and rest[0].isdigit() else 0,
+                   trace=trace)
+    elif "--paged" in sys.argv[1:]:
         main_paged(trace=trace)
     else:
         main(use_kernel="--kernel" in sys.argv[1:],

@@ -78,12 +78,18 @@ class CheckpointManager:
         expected_hosts: int = 1,
         max_concurrent_io: int = 2,
         keep: int = 3,
+        finalize_timeout: float = 300.0,
     ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.host_id = host_id
         self.expected_hosts = expected_hosts
         self.keep = keep
+        # how long host 0 waits for the other hosts' commit markers before
+        # giving up on publishing a step (the .tmp dir stays, invisible to
+        # restore; a later save of the same step can still finalize it) —
+        # tests drive this down to milliseconds to exercise the path
+        self.finalize_timeout = float(finalize_timeout)
         # Writer-slot admission: the paper's semaphore as I/O throttle.
         self._io_slots = TWASemaphore(max_concurrent_io, waiting="futex")
         self._pending: list[threading.Thread] = []
@@ -131,9 +137,11 @@ class CheckpointManager:
             if not emergency:
                 self._io_slots.post()
 
-    def _try_finalize(self, step: int, timeout: float = 300.0) -> bool:
+    def _try_finalize(self, step: int, timeout: float | None = None) -> bool:
         tmp = self.dir / f"step_{step:09d}.tmp"
         final = self.dir / f"step_{step:09d}"
+        if timeout is None:
+            timeout = self.finalize_timeout
         deadline = time.time() + timeout
         while time.time() < deadline:
             if final.exists():

@@ -1,0 +1,35 @@
+"""Self-healing serving: deterministic fault injection + recovery ladder.
+
+The serving engine's correctness rests on the paper's counter identities;
+`serving.sentinels` checks them every scanned round and emits a per-round
+health bitmask through the telemetry ring.  This package closes the loop:
+
+* :mod:`repro.resilience.faults` — a seeded, deterministic
+  :class:`FaultPlan` that injects dropped pokes, counter corruption,
+  double block releases, NaN model poison, stuck slots, and mid-megastep
+  crashes, identically on the host ``step()`` path and the scanned
+  ``megastep`` path;
+* :mod:`repro.resilience.recovery` — the :class:`ResilientEngine`
+  wrapper that reads the health stream at deterministic reaction
+  boundaries and escalates through the recovery ladder: quarantine →
+  audit-and-rebuild → kernel fallback → snapshot/restore with replay.
+
+See README.md in this directory for the architecture and the escalation
+policy.
+"""
+
+from .faults import (  # noqa: F401
+    CAPACITY_KINDS,
+    CORRUPTION_KINDS,
+    CRASH,
+    DOUBLE_RELEASE,
+    DROP_POKE,
+    FaultEvent,
+    FaultPlan,
+    InjectedCrash,
+    KV_COUNTER,
+    NAN_LOGIT,
+    STUCK_SLOT,
+    apply_fault,
+)
+from .recovery import ResilientEngine, exit_audit  # noqa: F401

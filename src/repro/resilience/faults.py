@@ -1,0 +1,235 @@
+"""Deterministic fault injection for the serving engine.
+
+A :class:`FaultPlan` is a seeded, immutable schedule of
+:class:`FaultEvent`\\ s — (round, kind, magnitude) triples drawn from a
+``numpy`` PRNG, so the same seed yields byte-identical fault streams on
+every run and on BOTH serving paths.  :func:`apply_fault` mutates the
+engine's state at an engine boundary (between rounds): it always updates
+the host mirrors, and additionally patches the persistent device state
+(block pool, model pytree) when the engine carries one — which is exactly
+what makes the repo's equivalence property (megastep(K) ≡ K·step())
+extend to faulty runs: both paths see the same state mutation at the
+same round boundary.
+
+Fault kinds split into two classes:
+
+**Capacity-loss faults** (``CAPACITY_KINDS``) — they destroy capacity or
+progress but never forge state the two serving paths represent
+differently, so host-loop and megastep runs stay bit-identical under
+them (the chaos equivalence property in tests/test_resilience.py):
+
+* ``DROP_POKE``   — a parked slot's observed bucket sequence is reset to
+  the current value: the wake poke it was waiting on is lost (the
+  TWA-protocol failure mode the paper's memo-based waiting prevents);
+* ``KV_COUNTER``  with ``delta < 0`` — the block semaphore's grant is
+  silently decremented: free blocks leak (trips ``H_KV_CONSERVE``);
+* ``STUCK_SLOT``  — a busy MID-PREFILL slot is force-parked on an
+  arbitrary bucket with a current sequence snapshot: it wedges until
+  some release happens to poke that bucket, or the watchdog trips
+  (chunked engines only — only the chunk phase honors parks, so a
+  decode-phase slot would wedge on the host but keep emitting in-scan).
+
+**Corruption faults** (``CORRUPTION_KINDS``) — they forge block
+identities or poison the model, which only the device path physically
+holds, so they are exercised as megastep-side detect-and-recover tests:
+
+* ``KV_COUNTER`` with ``delta > 0`` — phantom free blocks: the free
+  region grows over queue positions holding stale (possibly live) ids;
+* ``DOUBLE_RELEASE`` — a live block id is appended to the free queue a
+  second time (aliasing: ``H_KV_PARTITION``);
+* ``NAN_LOGIT``   — the first float leaf of the device model pytree is
+  poisoned with NaN (``H_NAN``); the host mirror sets the engine's
+  sticky nonfinite flag, matching the poison's persistence.
+
+``CRASH`` raises :class:`InjectedCrash` at the boundary — the recovery
+ladder's rung-4 trigger (snapshot restore + deterministic replay).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.functional import post_batch
+
+DROP_POKE = "drop_poke"
+KV_COUNTER = "kv_counter"
+DOUBLE_RELEASE = "double_release"
+NAN_LOGIT = "nan_logit"
+STUCK_SLOT = "stuck_slot"
+CRASH = "crash"
+
+CAPACITY_KINDS = (DROP_POKE, KV_COUNTER, STUCK_SLOT)
+CORRUPTION_KINDS = (DOUBLE_RELEASE, NAN_LOGIT)
+ALL_KINDS = CAPACITY_KINDS + CORRUPTION_KINDS + (CRASH,)
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by a ``CRASH`` fault at the engine boundary; carries the
+    event so the recovery driver can consume it (one-shot)."""
+
+    def __init__(self, event: "FaultEvent"):
+        super().__init__(f"injected crash at round {event.round}")
+        self.event = event
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    round: int       # engine round BEFORE which the fault fires
+    kind: str        # one of the module's kind constants
+    delta: int = 0   # KV_COUNTER: signed counter corruption magnitude
+    arg: int = 0     # kind-specific (STUCK_SLOT: target park bucket)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Immutable, seeded fault schedule.  The plan itself is pure data —
+    consumption bookkeeping (one-shot crashes, repaired corruption) lives
+    in the driver (`recovery.ResilientEngine`), so ONE plan object can be
+    shared verbatim by a host-loop run and a megastep run."""
+
+    seed: int
+    events: tuple = field(default_factory=tuple)
+
+    @classmethod
+    def random(cls, seed: int, *, rounds: int, n_faults: int = 3,
+               kinds: tuple = CAPACITY_KINDS, max_delta: int = 4,
+               first_round: int = 1) -> "FaultPlan":
+        """Draw ``n_faults`` events uniformly over kinds and rounds in
+        ``[first_round, rounds)``.  ``first_round`` defaults past round 0
+        so faults land on a warmed-up engine (there is nothing to corrupt
+        before the first admission).  Same seed → same plan, always."""
+        rng = np.random.default_rng(seed)
+        evs = []
+        lo = min(first_round, max(rounds - 1, 0))
+        for _ in range(n_faults):
+            r = int(rng.integers(lo, max(rounds, lo + 1)))
+            kind = kinds[int(rng.integers(0, len(kinds)))]
+            delta = 0
+            if kind == KV_COUNTER:
+                delta = -int(rng.integers(1, max_delta + 1))
+            evs.append(FaultEvent(round=r, kind=kind, delta=delta,
+                                  arg=int(rng.integers(0, 64))))
+        evs.sort(key=lambda e: (e.round, e.kind, e.delta, e.arg))
+        return cls(seed=seed, events=tuple(evs))
+
+    def with_crash(self, rnd: int) -> "FaultPlan":
+        evs = sorted(self.events + (FaultEvent(round=rnd, kind=CRASH),),
+                     key=lambda e: (e.round, e.kind, e.delta, e.arg))
+        return FaultPlan(seed=self.seed, events=tuple(evs))
+
+    def rounds(self) -> list[int]:
+        return sorted({e.round for e in self.events})
+
+
+# ---------------------------------------------------------- injection ----
+
+
+def _poison_model(model):
+    """NaN the first float leaf of the model pytree (device poison)."""
+    leaves, treedef = jax.tree_util.tree_flatten(model)
+    for i, lf in enumerate(leaves):
+        if hasattr(lf, "dtype") and jnp.issubdtype(lf.dtype, jnp.floating):
+            leaves[i] = (lf.reshape(-1).at[0].set(jnp.nan)
+                         .reshape(lf.shape))
+            break
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def apply_fault(engine, ev: FaultEvent) -> bool:
+    """Inject ``ev`` into ``engine`` at the current engine boundary.
+    Mutates the host mirrors always, plus the persistent device state
+    (block pool / model) when the engine carries one, so host-loop and
+    megastep engines observe the identical state change.  Returns True
+    if the fault found a target (e.g. DROP_POKE is a no-op when nothing
+    is parked).  ``CRASH`` events raise :class:`InjectedCrash` — they
+    are the driver's to handle, not this function's."""
+    if ev.kind == CRASH:
+        raise InjectedCrash(ev)
+
+    with engine._lock:
+        if ev.kind == DROP_POKE:
+            seq = np.asarray(engine._kv_sema.bucket_seq) \
+                if engine._kv_pool is not None else None
+            for s in sorted(engine.active):
+                r = engine.active[s]
+                if r.parked and seq is not None:
+                    # the park's memo is overwritten with the CURRENT
+                    # sequence: any poke since park time is forgotten,
+                    # and the slot waits for the NEXT poke on its bucket
+                    r.park_seq = int(seq[r.park_bucket])
+                    return True
+            return False
+
+        if ev.kind == KV_COUNTER:
+            if engine._kv_pool is None or ev.delta == 0:
+                return False
+            d = int(ev.delta)
+            engine._kv_free_blocks += d
+            engine._kv_sema = engine._kv_sema._replace(
+                grant=engine._kv_sema.grant + jnp.uint32(d & 0xFFFFFFFF))
+            if getattr(engine, "_kv_state", None) is not None:
+                kv = engine._kv_state
+                sema = kv.pool.sema._replace(
+                    grant=kv.pool.sema.grant + jnp.uint32(d & 0xFFFFFFFF))
+                engine._kv_state = kv._replace(
+                    pool=kv.pool._replace(sema=sema))
+                # keep the host mirror EXACTLY the device semaphore (it
+                # resyncs at every drain anyway)
+                engine._kv_sema = sema
+            return True
+
+        if ev.kind == DOUBLE_RELEASE:
+            if engine._kv_pool is None:
+                return False
+            engine._kv_free_blocks += 1
+            if getattr(engine, "_kv_state", None) is not None:
+                kv = engine._kv_state
+                NB = kv.pool.free_q.shape[0]
+                tbl = np.asarray(kv.tbl).reshape(-1)
+                live = tbl[tbl >= 0]
+                # re-free a LIVE block when one exists (true aliasing);
+                # else re-free the head of the free region (double free)
+                victim = int(live[0]) if live.size else int(
+                    np.asarray(kv.pool.free_q)[
+                        int(np.uint32(kv.pool.sema.ticket)) & (NB - 1)])
+                g = int(np.uint32(kv.pool.sema.grant))
+                free_q = kv.pool.free_q.at[g & (NB - 1)].set(victim)
+                sema = post_batch(kv.pool.sema, 1)  # grant+1, bucket poke
+                engine._kv_state = kv._replace(
+                    pool=kv.pool._replace(sema=sema, free_q=free_q))
+                engine._kv_sema = sema
+            else:
+                engine._kv_sema = post_batch(engine._kv_sema, 1)
+            return True
+
+        if ev.kind == NAN_LOGIT:
+            engine._nonfinite_sticky = True  # host H_NAN until restored
+            if engine.megastep_model is not None:
+                engine.megastep_model = _poison_model(engine.megastep_model)
+            return True
+
+        if ev.kind == STUCK_SLOT:
+            if not engine._chunk:
+                return False  # only the chunk phase honors parks
+            seq = np.asarray(engine._kv_sema.bucket_seq)
+            table = len(seq)
+            for s in sorted(engine.active):
+                r = engine.active[s]
+                # only a MID-PREFILL slot wedges identically on both
+                # paths (parks gate the chunk phase; a decode-phase slot
+                # keeps emitting in-scan).  prefill_pos < plen holds in
+                # both cursor encodings (host pins at plen, device
+                # counts past it), so the victim choice is path-stable.
+                if not r.parked and r.prefill_pos < len(r.prompt):
+                    b = ev.arg % table
+                    r.parked = True
+                    r.park_bucket = b
+                    r.park_seq = int(seq[b])
+                    return True
+            return False
+
+    raise ValueError(f"unknown fault kind {ev.kind!r}")

@@ -30,6 +30,7 @@ Fault-tolerance machinery:
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -95,17 +96,46 @@ class DistributedTicketLease:
     timeout, acquire() tombstones its own ticket; if the tombstone loses
     the race (grant arrived first) the lease is held and returned instead
     of raising.
+
+    Wait discipline: re-checks use **jittered exponential backoff**
+    (``backoff_base·2^attempt``, capped at ``backoff_cap``, scaled by a
+    seeded uniform jitter in [0.5, 1.5)) instead of a fixed poll period —
+    an observed grant advance resets the backoff, so near-head waiters
+    stay snappy while a stalled far queue decays to the cap and the store
+    sees O(hosts / cap) re-reads per second instead of a synchronized
+    herd.  While waiting (and on acquisition) the ticket renews a
+    **lease heartbeat** key (``<name>/hb/<ticket>``, epoch-ms) every
+    ``heartbeat_interval`` seconds; holders keep renewing via
+    :meth:`renew`, and :meth:`heartbeat_age` lets a reaper decide a
+    holder is dead and :meth:`cancel` its ticket.  Per-lease retry
+    counters are surfaced by :meth:`wait_telemetry`.
     """
 
     BUCKETS = 64
 
     def __init__(self, kv: KVStore, name: str, capacity: int = 1,
-                 long_term_threshold: int = 1):
+                 long_term_threshold: int = 1, backoff_base: float = 0.005,
+                 backoff_cap: float = 0.25, backoff_seed: int | None = None,
+                 heartbeat_interval: float = 0.5):
         self.kv = kv
         self.name = name
         self.threshold = long_term_threshold
         self._salt = index_for(hash(name), 1 << 31)
         self.dead_skipped = 0  # grant advances that bypassed a tombstone
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.heartbeat_interval = float(heartbeat_interval)
+        # seeded jitter: deterministic tests, decorrelated hosts (the
+        # default seed differs per lease name / process)
+        self._jitter = random.Random(
+            backoff_seed if backoff_seed is not None else hash((name, id(self))))
+        self.retry_counts = {
+            "acquires": 0,    # acquire() calls
+            "near": 0,        # short waits on the grant key (head of queue)
+            "far": 0,         # backoff waits on the hashed bucket key
+            "timeouts": 0,    # acquires that gave up (tombstoned)
+            "heartbeats": 0,  # lease-heartbeat renewals written
+        }
         if kv.incr(f"{name}/init", 0) == 0 and kv.incr(f"{name}/init") == 0:
             kv.incr(f"{name}/grant", capacity)
 
@@ -126,27 +156,73 @@ class DistributedTicketLease:
 
         return self.kv.txn(do)
 
+    def _renew_heartbeat(self, ticket: int) -> None:
+        key = f"{self.name}/hb/{ticket}"
+        now_ms = int(time.time() * 1000)
+        self.kv.txn(lambda d: d.__setitem__(key, now_ms))
+        self.retry_counts["heartbeats"] += 1
+
+    def renew(self, ticket: int) -> None:
+        """Holder-side lease-heartbeat renewal — call periodically while
+        holding the lease so reapers can tell held from leaked."""
+        self._renew_heartbeat(ticket)
+
+    def heartbeat_age(self, ticket: int) -> float | None:
+        """Seconds since ``ticket`` last renewed its heartbeat (None if it
+        never has).  A reaper that sees an age past its TTL can
+        :meth:`cancel` the ticket to unwedge the grant sequence."""
+        ms = self.kv.get(f"{self.name}/hb/{ticket}")
+        return None if ms == 0 else max(0.0, time.time() - ms / 1000.0)
+
+    def wait_telemetry(self) -> dict:
+        """Retry/heartbeat counters (cumulative, this process's view)."""
+        return dict(self.retry_counts, queue_depth=self.queue_depth())
+
     def acquire(self, timeout: float = 30.0) -> int:
         ticket = self.kv.incr(f"{self.name}/ticket")
         deadline = time.time() + timeout
         bucket = self._bucket_key(ticket)
         observed = self.kv.get(bucket)
+        self.retry_counts["acquires"] += 1
+        attempt = 0
+        last_grant = None
+        next_hb = 0.0  # first loop pass writes the heartbeat immediately
         while True:
             grant = self.kv.get(f"{self.name}/grant")
             if grant - ticket > 0:
+                self._renew_heartbeat(ticket)  # holder baseline
                 return ticket
-            if time.time() > deadline:
+            now = time.time()
+            if now > deadline:
                 if self.cancel(ticket):
+                    self.retry_counts["timeouts"] += 1
                     raise TimeoutError(
                         f"lease {self.name}: ticket {ticket} vs grant {grant} "
                         "(ticket tombstoned — grant sequence not wedged)")
                 return ticket  # lost race: the lease arrived at expiry
+            if now >= next_hb:
+                # waiting is also alive: renew the lease heartbeat so a
+                # reaper never tombstones a slow-but-live waiter
+                self._renew_heartbeat(ticket)
+                next_hb = now + self.heartbeat_interval
+            if grant != last_grant:
+                attempt = 0  # observed progress → re-arm fast polling
+            last_grant = grant
+            # jittered exponential backoff, clipped to the deadline and
+            # the next heartbeat due time
+            wait = min(self.backoff_cap,
+                       self.backoff_base * (1 << min(attempt, 16)))
+            wait *= 0.5 + self._jitter.random()
+            wait = max(1e-4, min(wait, deadline - now, next_hb - now + 1e-3))
+            attempt += 1
             if grant + self.threshold - ticket > 0:
                 # near the head: short-term wait directly on grant
-                self.kv.wait_change(f"{self.name}/grant", grant, timeout=0.05)
+                self.retry_counts["near"] += 1
+                self.kv.wait_change(f"{self.name}/grant", grant, timeout=wait)
             else:
                 # far: semi-local wait on our hashed bucket
-                observed = self.kv.wait_change(bucket, observed, timeout=0.25)
+                self.retry_counts["far"] += 1
+                observed = self.kv.wait_change(bucket, observed, timeout=wait)
 
     def release(self) -> None:
         gk = f"{self.name}/grant"

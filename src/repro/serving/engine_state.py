@@ -139,7 +139,13 @@ round-trips by construction.  Each probe maps onto a paper construct:
     (``Σ bucket_seq``): the wake traffic a release fan-out generates;
   * ``gate_stalls`` / ``parked`` — short-term (admission-time) vs
     long-term (mid-sequence) block waiting, the two wait classes the
-    paper distinguishes.
+    paper distinguishes;
+  * ``health`` — the in-scan invariant-sentinel bitmask
+    (`serving.sentinels`): counter conservation at all three semaphore
+    granularities, the block-pool partition audit, Banker headroom, the
+    stuck-slot watchdog, and NaN/Inf detection — 0 when every invariant
+    holds.  The recovery ladder (`repro.resilience.recovery`) keys its
+    escalation off these bits.
 
 The central property extends the repo's spine invariant: the ring of
 ``megastep(K)`` is **bit-identical** to the concatenation of the K
@@ -236,6 +242,9 @@ class Slots(NamedTuple):
     park_bucket: jax.Array  # (S,) i32 — observed TWAHash bucket (park_state)
     park_seq: jax.Array     # (S,) u32 — bucket sequence at park time
     chunk: jax.Array     # (S,) i32 — prefill tokens scheduled THIS round
+    last_adv: jax.Array  # (S,) i32 — last round this slot made progress
+    #                      (token emitted / chunk landed / just assigned) —
+    #                      the stuck-slot watchdog's clock (sentinels.py)
 
 
 class KVPool(NamedTuple):
@@ -271,6 +280,14 @@ class TelemetrySample(NamedTuple):
     slot_free: jax.Array        # i32 — free-slot sema grant − ticket
     kv_free: jax.Array          # i32 — block sema grant − ticket (0 dense)
     kv_pokes: jax.Array         # u32 — Σ block-sema bucket_seq (mod 2³²)
+    health: jax.Array           # u32 — invariant-sentinel bitmask
+    #                             (serving/sentinels.py; 0 = healthy.  Low
+    #                             16 bits are host-mirrorable checks —
+    #                             slot/credit/KV counter conservation,
+    #                             Banker headroom, stuck-slot watchdog;
+    #                             high bits are device-only ground truth:
+    #                             block-pool partition audit, NaN/Inf in
+    #                             the model.  See HEALTH_BITS.)
     credit: jax.Array           # (T,) i32 — per-tenant grant − consumed
     poke_dead: jax.Array        # (T,) u32 — per-tenant poke-window slack
     kv_wait_hist: jax.Array     # (H,) i32 — waiting-array occupancy
@@ -299,6 +316,7 @@ def make_telemetry_ring(capacity: int, n_tenants: int,
             prefill_chunks=z, prefill_pending=z, gate_stalls=z, parked=z,
             backlog=z, active=z, slot_free=z, kv_free=z,
             kv_pokes=jnp.zeros((R,), jnp.uint32),
+            health=jnp.zeros((R,), jnp.uint32),
             credit=jnp.zeros((R, T), jnp.int32),
             poke_dead=jnp.zeros((R, T), jnp.uint32),
             kv_wait_hist=jnp.zeros((R, hist), jnp.int32)))
@@ -344,6 +362,7 @@ def ring_samples(ring, t0: float = 0.0) -> list:
             "slot_free": int(buf.slot_free[k]),
             "kv_free": int(buf.kv_free[k]),
             "kv_pokes": int(buf.kv_pokes[k]),
+            "health": int(buf.health[k]),
             "credit": [int(c) for c in np.asarray(buf.credit[k])],
             "poke_dead": [int(d) for d in np.asarray(buf.poke_dead[k])],
             "kv_wait_hist": [int(h) for h in
@@ -446,7 +465,8 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
             parked=jnp.zeros((S,), bool),
             park_bucket=jnp.zeros((S,), jnp.int32),
             park_seq=jnp.zeros((S,), jnp.uint32),
-            chunk=jnp.zeros((S,), jnp.int32)),
+            chunk=jnp.zeros((S,), jnp.int32),
+            last_adv=jnp.zeros((S,), jnp.int32)),
     )
 
 
@@ -571,7 +591,8 @@ def _assign_slots(state: EngineState, admitted: jax.Array,
         parked=sl.parked.at[tgt].set(False, mode="drop"),
         park_bucket=sl.park_bucket.at[tgt].set(0, mode="drop"),
         park_seq=sl.park_seq.at[tgt].set(jnp.uint32(0), mode="drop"),
-        chunk=sl.chunk.at[tgt].set(0, mode="drop"))
+        chunk=sl.chunk.at[tgt].set(0, mode="drop"),
+        last_adv=sl.last_adv.at[tgt].set(state.round_no, mode="drop"))
     bslot = bl.slot.at[jnp.where(assign, rows, B)].set(tgt, mode="drop")
     return state._replace(slots=slots, slot_sema=slot_sema,
                           backlog=bl._replace(slot=bslot)), rows, assign, tgt
@@ -580,7 +601,7 @@ def _assign_slots(state: EngineState, admitted: jax.Array,
 def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
                  admit_fn: AdmitFn = None, admit_impl=None,
                  block_size: int = 0, chunk: int = 0, budget: int = 0,
-                 commit: int = 0):
+                 commit: int = 0, watchdog: int = 0):
     """One fused engine iteration — the pure-functional `step()`.
 
     ``admit_impl`` overrides the admission-round implementation (signature
@@ -601,6 +622,11 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     waiting array (module docstring; `serving.prefill`).  ``token_fn``
     must then handle the prefill phase — see
     :func:`chunked_prefill_token_fn`.
+
+    ``watchdog > 0`` arms the stuck-slot sentinel: a busy slot that makes
+    no progress for ``watchdog`` consecutive rounds sets ``H_STUCK`` in
+    the round's health bitmask (`serving.sentinels` — requires the
+    telemetry ring to be observable).
     """
     paged = state.kv is not None
     assert not paged or block_size > 0, "paged pool needs block_size"
@@ -742,7 +768,10 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     adv = emit.astype(jnp.int32) + (sl.chunk if chunked else 0)
     sl = sl._replace(token=toks,
                      emitted=sl.emitted + emit.astype(jnp.int32),
-                     pos=sl.pos + adv)
+                     pos=sl.pos + adv,
+                     # watchdog clock: any forward motion (token emitted
+                     # or prefill chunk landed) re-arms the slot
+                     last_adv=jnp.where(adv > 0, rno, sl.last_adv))
 
     # (5) completion: done slots post back; their units bank for the NEXT
     # round (the host engine's `_qos_free` in kernel mode)
@@ -768,6 +797,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     # bit-identity property of tests/test_obs.py) — extend both or
     # neither.
     if state.ring is not None:
+        from .sentinels import round_health
+
         parked_mask = sl.busy & sl.parked
         sample = TelemetrySample(
             round_no=rno,
@@ -789,6 +820,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
             kv_pokes=(jnp.sum(state.kv.pool.sema.bucket_seq,
                               dtype=jnp.uint32) if paged
                       else jnp.uint32(0)),
+            health=round_health(state, model, rno, block_size=block_size,
+                                chunked=chunked, watchdog=watchdog),
             credit=_sdist(state.qos.grant, state.qos.consumed),
             poke_dead=state.qos.dead,
             kv_wait_hist=bucket_histogram(
@@ -809,7 +842,7 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
                   admit_fn: AdmitFn = None, admit_impl=None,
                   block_size: int = 0, chunk: int = 0, budget: int = 0,
-                  commit: int = 0):
+                  commit: int = 0, watchdog: int = 0):
     """K fused engine rounds as one `lax.scan` — K host round-trips become
     one launch + one drain.  ``nows``: (K,) f32 epoch-relative timestamps
     (the host projects them at launch; in-graph time never advances on its
@@ -822,7 +855,8 @@ def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
         st, m, ys = engine_round(st, m, now, token_fn=token_fn,
                                  admit_fn=admit_fn, admit_impl=admit_impl,
                                  block_size=block_size, chunk=chunk,
-                                 budget=budget, commit=commit)
+                                 budget=budget, commit=commit,
+                                 watchdog=watchdog)
         return (st, m), ys
 
     (state, model), ys = jax.lax.scan(body, (state, model), nows)
@@ -831,19 +865,20 @@ def megastep_scan(state: EngineState, model, nows, *, token_fn: TokenFn,
 
 @functools.partial(jax.jit, static_argnames=("token_fn", "admit_fn",
                                              "admit_impl", "block_size",
-                                             "chunk", "budget", "commit"),
+                                             "chunk", "budget", "commit",
+                                             "watchdog"),
                    donate_argnums=(0, 1))
 def megastep_jit(state: EngineState, model, nows, *, token_fn: TokenFn,
                  admit_fn: AdmitFn = None, admit_impl=None,
                  block_size: int = 0, chunk: int = 0, budget: int = 0,
-                 commit: int = 0):
+                 commit: int = 0, watchdog: int = 0):
     """Donated-jit entry: the EngineState and model pytrees are donated, so
     steady-state serving re-uses their device buffers across megasteps
     instead of reallocating per launch."""
     return megastep_scan(state, model, nows, token_fn=token_fn,
                          admit_fn=admit_fn, admit_impl=admit_impl,
                          block_size=block_size, chunk=chunk, budget=budget,
-                         commit=commit)
+                         commit=commit, watchdog=watchdog)
 
 
 def fused_round_impl(state, tenant_ids, tickets, alive, deadlines, now,

@@ -111,6 +111,11 @@ class Request:
     parked: bool = False  # block-stalled on the block semaphore's waiting array
     park_bucket: int = 0  # observed TWAHash bucket (core.functional.park_state)
     park_seq: int = 0  # bucket sequence at park time
+    # --- resilience (serving.sentinels / repro.resilience) ---
+    last_adv_round: int = -1  # last engine round with forward progress
+    #                           (host mirror of Slots.last_adv — the
+    #                           stuck-slot watchdog's clock)
+    retries: int = 0  # quarantine-requeue attempts consumed (recovery ladder)
 
 
 @dataclass
@@ -126,6 +131,13 @@ class EngineStats:
     host_syncs: int = 0  # host↔device round-trips (1/step; 1/megastep)
     kv_block_stalls: int = 0  # cumulative parked slot-rounds (block waits)
     prefill_chunks: int = 0  # prompt chunks written (chunked prefill)
+    # --- recovery ladder (repro.resilience.recovery / serving.sentinels) ---
+    quarantined: int = 0  # rung 1: sick slots evicted (blocks released)
+    requeued: int = 0  # quarantined requests re-submitted after backoff
+    kv_audits: int = 0  # rung 2: free-queue rebuilds from table ground truth
+    kernel_fallbacks: int = 0  # rung 3: fused kernel → functional path
+    snapshots: int = 0  # rung 4: EngineState checkpoints taken
+    restores: int = 0  # rung 4: EngineState checkpoints restored
 
 
 class ContinuousBatchingEngine:
@@ -146,6 +158,7 @@ class ContinuousBatchingEngine:
         kv_pool: Optional[tuple] = None,
         chunked_prefill: Optional[tuple] = None,
         obs=None,
+        watchdog: int = 0,
     ):
         self.step_fn = step_fn
         self.prefill_fn = prefill_fn
@@ -171,6 +184,22 @@ class ContinuousBatchingEngine:
         # TelemetryRing in its ONE host sync (engine_state.py docstring).
         self._obs = obs
         self._last_samples: list[dict] = []  # most recent step/megastep
+        # --- invariant sentinels (serving.sentinels) ---
+        # ``watchdog=W``: the stuck-slot sentinel trips (H_STUCK in the
+        # per-round health bitmask) when any busy slot makes no progress
+        # for ≥ W consecutive rounds; 0 disables.  Both serving paths
+        # evaluate it from the same clock (Slots.last_adv on device,
+        # Request.last_adv_round on host) so the telemetry bit-identity
+        # property covers the health field.
+        self._watchdog = int(watchdog)
+        # host H_NAN input: set when the host decode's logits (already on
+        # host — never a hidden device sync) carry a NaN/Inf, or directly
+        # by the fault injector (repro.resilience.faults); reset per round
+        self._round_nonfinite = False
+        # sticky variant: an injected model poison persists until a rung-4
+        # restore repairs it (the device model stays NaN'd the same way),
+        # so every round re-raises H_NAN until recovery clears this
+        self._nonfinite_sticky = False
         self._now_r = 0.0  # clock() at step start (lifecycle stamps)
         # pure-host mirrors of the global slot semaphore's counters, so
         # `telemetry()` never touches device arrays (a hidden host sync
@@ -819,6 +848,7 @@ class ContinuousBatchingEngine:
             self._round_gate_stalls = 0
             self._round_prefill_tokens = 0
             self._round_prefill_chunks = 0
+            self._round_nonfinite = self._nonfinite_sticky
             a0, e0, p0 = (self.stats.admitted, self.stats.expired,
                           self.stats.preempted)
             self._preempt_expired()
@@ -827,6 +857,7 @@ class ContinuousBatchingEngine:
                 req.slot = slot
                 req.admit_t = time.time()
                 req.admit_round = rnd
+                req.last_adv_round = rnd  # assignment arms the watchdog
                 self.active[slot] = req
                 self.stats.admitted += 1
                 if self._chunk:
@@ -851,10 +882,15 @@ class ContinuousBatchingEngine:
                 decode = list(self.active.items())
             if decode:
                 logits = self.step_fn([r for _, r in decode])
+                if (isinstance(logits, np.ndarray)
+                        and logits.dtype.kind == "f"
+                        and not np.all(np.isfinite(logits))):
+                    self._round_nonfinite = True  # H_NAN sentinel input
                 next_tokens = sample_fn(logits)
                 done_slots = []
                 for (slot, req), tok in zip(decode, next_tokens):
                     req.out_tokens.append(int(tok))
+                    req.last_adv_round = rnd  # progress re-arms watchdog
                     if req.first_tok_clock is None:
                         req.first_tok_clock = now_r
                     req.last_tok_clock = now_r
@@ -931,6 +967,7 @@ class ContinuousBatchingEngine:
                 r.park_seq = int(sq[s])
             if tokens[s]:
                 r.prefill_pos += int(tokens[s])
+                r.last_adv_round = self._round_no  # chunk landed: progress
                 if r.prefill_pos >= pl:
                     self.prefill_fn(r)  # last chunk landed: full KV ready
         self.stats.prefill_chunks += int((tokens > 0).sum())
@@ -1091,9 +1128,13 @@ class ContinuousBatchingEngine:
             sprk = np.zeros(S, bool)
             spb = np.zeros(S, np.int32)
             sps = np.zeros(S, np.uint32)
+            sladv = np.zeros(S, np.int32)
             chunked = self._chunk > 0
             for slot, r in self.active.items():
                 sb[slot] = True
+                # watchdog clock rides host↔device with the slot (the
+                # stuck-slot sentinel counts from the last progress round)
+                sladv[slot] = r.last_adv_round
                 srow[slot] = B + slot  # host-resolved: active at launch
                 srid[slot] = r.rid
                 sten[slot] = self._tindex[r.tenant_id]
@@ -1143,7 +1184,8 @@ class ContinuousBatchingEngine:
                     prompt=jnp.asarray(sprm), prio_r=jnp.asarray(spri_r),
                     prio_k=jnp.asarray(spri_k), parked=jnp.asarray(sprk),
                     park_bucket=jnp.asarray(spb), park_seq=jnp.asarray(sps),
-                    chunk=jnp.zeros(S, jnp.int32)),
+                    chunk=jnp.zeros(S, jnp.int32),
+                    last_adv=jnp.asarray(sladv)),
                 slot_sema=state.slot_sema._replace(
                     ticket=jnp.uint32(int(sb.sum()))))
 
@@ -1176,7 +1218,8 @@ class ContinuousBatchingEngine:
                 block_size=self._kv_bs if paged else 0,
                 chunk=self._chunk if paged else 0,
                 budget=self._budget if paged else 0,
-                commit=self._kv_commit if paged else 0)
+                commit=self._kv_commit if paged else 0,
+                watchdog=self._watchdog)
             self.megastep_model = model
             self._megastep_model_last = model
 
@@ -1262,6 +1305,10 @@ class ContinuousBatchingEngine:
                            for s in np.flatnonzero(st_h.slots.busy)}
             self.free_slots = [s for s in range(S)
                                if not st_h.slots.busy[s]]
+            for s, r in self.active.items():
+                # the watchdog clock rides back to the host mirror so the
+                # next launch (or a host step) resumes the same count
+                r.last_adv_round = int(st_h.slots.last_adv[s])
             self._qos_free = int(st_h.free)
             self.qos = st.qos  # keep the (fresh) device arrays
             if paged:
@@ -1302,6 +1349,151 @@ class ContinuousBatchingEngine:
             self._round_no = base + K
             return int(st_h.slots.busy.sum())
 
+    # ----------------------------------------------------------- recovery ---
+    # The scheduler-owned rungs of the recovery ladder
+    # (repro.resilience.recovery drives escalation policy; these methods
+    # implement containment so EVERY serving mode — host loop, megastep,
+    # paged, chunked — repairs through one audited path).
+
+    def quarantine(self, slot: int) -> Request:
+        """Rung 1 — evict a sick slot: release every block it holds (host
+        mirror AND the persistent device pool, poking the waiting-array
+        buckets exactly like a completion), return its slot unit to the
+        replenishment pool, and hand the request back with its decode
+        progress reset so the caller can re-submit it after a backoff
+        (`Request.retries` carries the per-request budget).  The request's
+        ``done_event`` is NOT set — it is still in flight."""
+        from ..core.functional import pool_release
+
+        with self._lock:
+            req = self.active.pop(slot)
+            self.free_slots.append(slot)
+            self.stats.quarantined += 1
+            if self._kv_pool is not None:
+                if self._kv_state is not None:
+                    # megastep-persistent pool: the device block table is
+                    # ground truth — release ITS row (counter + free-queue
+                    # + bucket pokes), clear it, and resync the host
+                    # mirrors off the released pool's counter identity
+                    kv = self._kv_state
+                    onehot = jnp.arange(kv.tbl.shape[0]) == slot
+                    pool = pool_release(kv.pool, kv.tbl, onehot)
+                    self._kv_state = kv._replace(
+                        pool=pool,
+                        tbl=jnp.where(onehot[:, None], -1, kv.tbl))
+                    self._kv_sema = pool.sema
+                    self._kv_free_blocks = int(np.int32(
+                        np.uint32(pool.sema.grant)
+                        - np.uint32(pool.sema.ticket)))
+                elif self._chunk:
+                    self._kv_free_blocks += req.kv_blocks
+                    self._kv_sema = post_batch(self._kv_sema, req.kv_blocks)
+                else:
+                    dem = self._kv_demand(req)
+                    self._kv_free_blocks += dem
+                    self._kv_sema = post_batch(self._kv_sema, dem)
+            # reset decode progress: a requeued request replays from its
+            # prompt (fresh ticket, fresh slot, fresh KV) — partial output
+            # from the sick slot is untrusted by definition
+            req.slot = None
+            req.out_tokens.clear()
+            req.prefill_pos = 0
+            req.kv_blocks = 0
+            req.parked = False
+            req.admit_round = -1
+            req.last_adv_round = -1
+            req.first_tok_clock = None
+            req.last_tok_clock = None
+            req.fast = False
+            # the freed unit re-enters admission like any completion
+            if self._tenants is not None:
+                self._replenish_qos(1)
+            else:
+                self.sema = post_batch(self.sema, 1)
+                self._sema_grant_h += 1
+            return req
+
+    def audit_kv(self) -> dict:
+        """Rung 2 — audit-and-rebuild the block pool from block-table
+        ground truth.  The live tables are the only state a corrupted
+        counter cannot forge (each busy slot's KV physically occupies its
+        blocks): every id NOT owned by exactly one table cell is returned
+        to the free queue, aliased duplicates are cleared from their later
+        owners (reported as ``victims`` for the caller to quarantine), and
+        the block semaphore's ticket is rewritten so ``grant − ticket``
+        equals the true free count — ``grant`` itself is preserved, so the
+        poke history parked slots observed stays valid.  All parked flags
+        are cleared (stalled slots re-park against the repaired pool on
+        their next round).  Returns a repair report."""
+        if self._kv_pool is None:
+            raise RuntimeError("audit_kv needs a block-paged pool "
+                               "(kv_pool=...)")
+        with self._lock:
+            self.stats.kv_audits += 1
+            NB = self._kv_blocks
+            report = {"aliased": 0, "leaked": 0, "counter_drift": 0,
+                      "victims": []}
+            if self._kv_state is not None:
+                kv = self._kv_state
+                tbl = np.asarray(kv.tbl).copy()
+                S, MB = tbl.shape
+                owner = np.full(NB, -1, np.int64)
+                for s in range(S):
+                    for j in range(MB):
+                        b = tbl[s, j]
+                        if b < 0:
+                            continue
+                        if b >= NB or owner[b] >= 0:
+                            # out-of-range or aliased: the LATER owner
+                            # loses the cell (its KV is untrusted)
+                            tbl[s, j] = -1
+                            report["aliased"] += 1
+                            if s not in report["victims"]:
+                                report["victims"].append(s)
+                        else:
+                            owner[b] = s
+                free_ids = np.flatnonzero(owner < 0).astype(np.int32)
+                n_free = len(free_ids)
+                sema = kv.pool.sema
+                drift = n_free - int(np.int32(np.uint32(sema.grant)
+                                              - np.uint32(sema.ticket)))
+                report["counter_drift"] = int(drift)
+                report["leaked"] = max(0, int(drift))
+                # rebuild: free region occupies queue positions
+                # [ticket, grant) — keep grant, set ticket = grant − free
+                new_ticket = np.uint32(int(np.uint32(sema.grant)) - n_free)
+                q = np.asarray(kv.pool.free_q).copy()
+                pos = (int(new_ticket) + np.arange(n_free)) & (NB - 1)
+                q[pos] = free_ids
+                self._kv_state = kv._replace(
+                    pool=kv.pool._replace(
+                        sema=sema._replace(ticket=jnp.uint32(new_ticket)),
+                        free_q=jnp.asarray(q)),
+                    tbl=jnp.asarray(tbl))
+                self._kv_sema = self._kv_state.pool.sema
+                self._kv_free_blocks = n_free
+                # host per-request held-block mirrors follow the table
+                for s, r in self.active.items():
+                    r.kv_blocks = int((tbl[s] >= 0).sum())
+            else:
+                # host-loop mode: the per-request counters are the ground
+                # truth; reconcile the free counter and semaphore ticket
+                if self._chunk:
+                    held = sum(r.kv_blocks for r in self.active.values())
+                else:
+                    held = sum(self._kv_demand(r)
+                               for r in self.active.values())
+                n_free = NB - held
+                drift = n_free - self._kv_free_blocks
+                report["counter_drift"] = int(drift)
+                report["leaked"] = max(0, int(drift))
+                self._kv_free_blocks = n_free
+                self._kv_sema = self._kv_sema._replace(
+                    ticket=self._kv_sema.grant - jnp.uint32(n_free))
+            for r in self.active.values():
+                r.parked = False  # re-park (if still short) post-repair
+            return report
+
     # ---------------------------------------------------------- telemetry ---
 
     def _obs_done(self, r: Request) -> None:
@@ -1324,6 +1516,7 @@ class ContinuousBatchingEngine:
         host bookkeeping.  The bit-identity property of tests/test_obs.py
         compares these with ``==`` across K rounds; extend both sides or
         neither (see `engine_state.TelemetrySample`)."""
+        from . import sentinels
         from .engine_state import SLOT_TABLE
 
         if self._tenants is not None:
@@ -1347,6 +1540,27 @@ class ContinuousBatchingEngine:
             if self._chunk:
                 plen = min(len(r.prompt), self._prompt_cap) or 1
                 pending += max(plen - r.prefill_pos, 0)
+        # per-round health bitmask — the host mirror of the in-scan
+        # sentinel checks (serving.sentinels; megastep emits the same
+        # field from `round_health` over the post-round device state)
+        if self._chunk:
+            kv_held = sum(r.kv_blocks for r in self.active.values())
+        elif paged:
+            kv_held = sum(self._kv_demand(r) for r in self.active.values())
+        else:
+            kv_held = 0
+        health = sentinels.host_round_health(
+            n_slots=self.n_slots, free_slots=len(self.free_slots),
+            active=len(self.active), credit=credit, paged=paged,
+            kv_free=int(self._kv_free_blocks) if paged else 0,
+            kv_held=kv_held,
+            kv_blocks=self._kv_blocks if paged else 0,
+            chunked=self._chunk > 0,
+            headroom=self._kv_headroom() if self._chunk else 0,
+            stuck=(self._watchdog > 0 and any(
+                rnd - r.last_adv_round >= self._watchdog
+                for r in self.active.values())),
+            nonfinite=self._round_nonfinite)
         return {
             "round": rnd,
             "clock": float(now_r),
@@ -1366,6 +1580,7 @@ class ContinuousBatchingEngine:
             "kv_free": int(self._kv_free_blocks) if paged else 0,
             "kv_pokes": (int(np.sum(np.asarray(self._kv_sema.bucket_seq),
                                     dtype=np.uint32)) if paged else 0),
+            "health": int(health),
             "credit": [int(c) for c in credit],
             "poke_dead": [int(d) for d in dead],
             "kv_wait_hist": [int(h) for h in hist],
@@ -1402,6 +1617,16 @@ class ContinuousBatchingEngine:
             "stats": self.stats.__dict__.copy(),
             "pool_utilization": None,  # dense: no pool (see docstring)
             "last_samples": list(self._last_samples),
+            # recovery-ladder action counters (repro.resilience) — every
+            # containment/repair the engine performed, by rung
+            "recovery": {
+                "quarantined": self.stats.quarantined,
+                "requeued": self.stats.requeued,
+                "kv_audits": self.stats.kv_audits,
+                "kernel_fallbacks": self.stats.kernel_fallbacks,
+                "snapshots": self.stats.snapshots,
+                "restores": self.stats.restores,
+            },
         }
         if self._kv_pool is not None:
             # block-pool gauges (the block semaphore's counter identity):

@@ -1,0 +1,198 @@
+"""In-scan invariant sentinels — the engine's health bitmask.
+
+The whole serving stack rests on the paper's counter identities (grant −
+ticket = available units at every one of the three semaphore
+granularities) and on the block-pool partition invariant (free queue ∪
+live block tables = {0..NB−1}, nothing lost, nothing aliased).  PRs 3–6
+*trust* those invariants; this module **checks** them, every scanned
+round, inside the megastep itself — a corrupted counter, leaked block,
+dropped poke, or NaN'd KV block is visible in the SAME single host sync
+that drains the telemetry ring, instead of surfacing rounds later as a
+wedged slot or a silent deadlock.
+
+Each round emits one ``uint32`` health bitmask (0 = healthy) carried in
+:class:`~repro.serving.engine_state.TelemetrySample.health`.  The bits
+split into two tiers:
+
+**Mirrored bits** (low 16, ``HEALTH_MIRRORED_MASK``) — checks computable
+identically from the host `step()` bookkeeping and from the scanned
+device state, so the repo's bit-identity property (megastep ring ≡ K
+host samples, tests/test_obs.py) extends to the health field:
+
+  * ``H_SLOT_CONSERVE`` — the free-slot semaphore's counter identity
+    broke: ``grant − ticket ≠ S − busy`` (a slot was lost or double
+    granted);
+  * ``H_CREDIT_NEG``   — some tenant's QoS credit ``grant − consumed``
+    went negative (admission spent credit that was never granted);
+  * ``H_KV_CONSERVE``  — the block semaphore's free count plus the
+    blocks held by the slot tables no longer equals the pool size (a
+    leaked or double-released block, a corrupted counter);
+  * ``H_BANKER``       — the no-deadlock headroom invariant is violated:
+    the Banker chain's required headroom exceeds the free pool (some
+    parked slot may now never resume) — chunked mode only;
+  * ``H_STUCK``        — stuck-slot watchdog: some busy slot has made no
+    progress (no token emitted, no prefill chunk landed) for ≥ W
+    consecutive rounds (``watchdog=W``; 0 disables).  A dropped poke or
+    a silently wedged sequence trips this even when every counter still
+    balances.
+
+**Deep bits** (high 16) — device-side ground-truth checks the host
+mirrors cannot reproduce without a sync (the host keeps counters, not
+block *identities*); healthy runs emit 0 on both paths so bit-identity
+is preserved, and the chaos equivalence property masks them with
+``HEALTH_MIRRORED_MASK``:
+
+  * ``H_KV_PARTITION`` — the full partition audit: the multiset
+    {free-queue region} ∪ {live table entries} must be exactly
+    {0..NB−1}.  Catches aliasing (one block in two tables, or live AND
+    free) that a pure count can miss;
+  * ``H_NAN``          — a non-finite value appeared in a float leaf of
+    the model pytree (KV pools, weights): the classic silent-corruption
+    mode of long-running decode.  The host `step()` path sets the same
+    bit from its own logits.
+
+The recovery ladder (`repro.resilience.recovery`) maps bits to rungs:
+``H_STUCK``/``H_NAN`` → quarantine the sick slot; ``H_KV_CONSERVE`` /
+``H_KV_PARTITION`` / ``H_CREDIT_NEG`` → audit-and-rebuild from
+block-table ground truth; repeated divergence on the fused kernel path →
+functional fallback; anything unrecoverable → snapshot restore.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..admission.functional_qos import block_headroom
+from ..core.functional import _sdist, pool_free_count
+from .prefill import banker_order
+
+# ---- mirrored bits (host step() computes the identical value) --------------
+H_SLOT_CONSERVE = 1 << 0   # free-slot sema: grant − ticket ≠ S − busy
+H_CREDIT_NEG = 1 << 1      # some tenant credit grant − consumed < 0
+H_KV_CONSERVE = 1 << 2     # block sema: free + held ≠ pool size
+H_BANKER = 1 << 3          # Banker headroom > free pool (deadlock risk)
+H_STUCK = 1 << 4           # watchdog: no progress for ≥ W rounds
+
+# ---- deep bits (device ground truth; host emits 0 — masked in equivalence)
+H_KV_PARTITION = 1 << 16   # free queue ∪ tables ≠ {0..NB−1} (aliasing)
+H_NAN = 1 << 17            # non-finite value in a model float leaf
+
+HEALTH_MIRRORED_MASK = 0xFFFF
+
+HEALTH_BITS = {
+    "slot_conserve": H_SLOT_CONSERVE,
+    "credit_neg": H_CREDIT_NEG,
+    "kv_conserve": H_KV_CONSERVE,
+    "banker": H_BANKER,
+    "stuck": H_STUCK,
+    "kv_partition": H_KV_PARTITION,
+    "nan": H_NAN,
+}
+
+
+def decode_health(mask: int) -> list[str]:
+    """Human-readable view of a health bitmask (telemetry/log rendering)."""
+    return [name for name, bit in HEALTH_BITS.items() if int(mask) & bit]
+
+
+def _bit(cond, bit):
+    return jnp.where(cond, jnp.uint32(bit), jnp.uint32(0))
+
+
+def kv_partition_violated(kv) -> jax.Array:
+    """Ground-truth partition audit of the block pool (bool scalar): the
+    free-queue region ``free_q[ticket..grant)`` and the live block-table
+    entries must together cover every block id exactly once.  O(NB + S·MB)
+    — a bincount, cheap enough to run every scanned round."""
+    NB = kv.pool.free_q.shape[0]
+    free_n = pool_free_count(kv.pool)
+    bad = (free_n < 0) | (free_n > NB)
+    n = jnp.clip(free_n, 0, NB).astype(jnp.uint32)
+    pos = jnp.arange(NB, dtype=jnp.uint32)
+    in_free = pos < n
+    qidx = ((kv.pool.sema.ticket + pos) & jnp.uint32(NB - 1)).astype(jnp.int32)
+    fid = kv.pool.free_q[qidx]
+    ok_f = in_free & (fid >= 0) & (fid < NB)
+    bad |= jnp.any(in_free & ~ok_f)                 # free id out of range
+    cnt = jnp.zeros((NB,), jnp.int32).at[
+        jnp.where(ok_f, fid, 0)].add(ok_f.astype(jnp.int32))
+    tid = kv.tbl.reshape(-1)
+    ok_t = (tid >= 0) & (tid < NB)
+    bad |= jnp.any(tid >= NB)                       # table id out of range
+    cnt = cnt.at[jnp.where(ok_t, tid, 0)].add(ok_t.astype(jnp.int32))
+    return bad | jnp.any(cnt != 1)
+
+
+def model_nonfinite(model) -> jax.Array:
+    """True iff any float leaf of the model pytree holds a NaN/Inf."""
+    bad = jnp.zeros((), bool)
+    for leaf in jax.tree_util.tree_leaves(model):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+            bad |= ~jnp.all(jnp.isfinite(leaf))
+    return bad
+
+
+def round_health(state, model, round_no, *, block_size: int = 0,
+                 chunked: bool = False, watchdog: int = 0) -> jax.Array:
+    """The per-round health bitmask, computed in-graph over the
+    POST-round engine state (step 6 of `engine_state.engine_round`).
+    ``round_no`` is the round being sampled (the watchdog's clock).
+    Returns a ``uint32`` scalar; 0 = every invariant holds."""
+    sl = state.slots
+    S = sl.busy.shape[0]
+    active = jnp.sum(sl.busy.astype(jnp.int32))
+    h = _bit(_sdist(state.slot_sema.grant, state.slot_sema.ticket)
+             != S - active, H_SLOT_CONSERVE)
+    h |= _bit(jnp.any(_sdist(state.qos.grant, state.qos.consumed) < 0),
+              H_CREDIT_NEG)
+    if state.kv is not None:
+        held = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32))
+        NB = state.kv.pool.free_q.shape[0]
+        h |= _bit(pool_free_count(state.kv.pool) + held != NB,
+                  H_KV_CONSERVE)
+        h |= _bit(kv_partition_violated(state.kv), H_KV_PARTITION)
+        if chunked:
+            held_s = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32), axis=1)
+            from .engine_state import _slot_rem  # avoid import cycle
+
+            rem = _slot_rem(sl, held_s, block_size)
+            need = block_headroom(
+                rem, held_s,
+                banker_order(rem, sl.prio_r, sl.prio_k, sl.busy), sl.busy)
+            h |= _bit(need > pool_free_count(state.kv.pool), H_BANKER)
+    if watchdog > 0:
+        h |= _bit(jnp.any(sl.busy
+                          & (round_no - sl.last_adv >= watchdog)), H_STUCK)
+    h |= _bit(model_nonfinite(model), H_NAN)
+    return h
+
+
+def host_round_health(*, n_slots: int, free_slots: int, active: int,
+                      credit, paged: bool = False, kv_free: int = 0,
+                      kv_held: int = 0, kv_blocks: int = 0,
+                      chunked: bool = False, headroom: int = 0,
+                      stuck: bool = False,
+                      nonfinite: bool = False) -> int:
+    """Host mirror of :func:`round_health`'s MIRRORED bits, computed from
+    the scheduler's pure-host bookkeeping (`scheduler._host_sample`) —
+    plus ``H_NAN`` from the host path's own logits.  Healthy rounds
+    produce 0 on both paths, so the telemetry bit-identity property
+    covers the health field; deep device-side bits are host-0 by
+    definition (module docstring)."""
+    h = 0
+    if free_slots != n_slots - active:
+        h |= H_SLOT_CONSERVE
+    if any(int(c) < 0 for c in credit):
+        h |= H_CREDIT_NEG
+    if paged:
+        if kv_free + kv_held != kv_blocks:
+            h |= H_KV_CONSERVE
+        if chunked and headroom > kv_free:
+            h |= H_BANKER
+    if stuck:
+        h |= H_STUCK
+    if nonfinite:
+        h |= H_NAN
+    return h

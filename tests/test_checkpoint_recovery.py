@@ -1,0 +1,89 @@
+"""Checkpoint-manager fault paths (PR 7 satellite).
+
+  * emergency ``save_sync`` bypasses the TWA writer-slot queue yet still
+    produces a COMPLETE, restorable checkpoint;
+  * ``_try_finalize`` times out (returns False, nothing published) while
+    commit markers are missing, then finalizes the SAME step once the
+    missing host commits — the torn ``.tmp`` dir is invisible to restore
+    throughout;
+  * uint32 semaphore counters round-trip bit-exact through the npz
+    shard format, including values wrapped past 2³¹ (the regression this
+    pins: a float or int32 cast would corrupt every TWA ticket/grant in
+    a rung-4 snapshot).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import test_chunked_prefill as tcp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.serving.engine_state import rid_token_fn
+
+DT = tcp.DT
+
+
+def test_emergency_save_sync_restorable(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "ctr": np.asarray([7, 9], np.uint32)}
+    m.save_sync(5, tree)
+    assert m.complete_steps() == [5]
+    got, step = m.restore({"w": np.zeros((3, 4), np.float32),
+                           "ctr": np.zeros(2, np.uint32)})
+    assert step == 5
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    np.testing.assert_array_equal(got["ctr"], tree["ctr"])
+    assert m.io_telemetry()["writers_queued"] == 0
+
+
+def test_try_finalize_timeout_then_late_host_commits(tmp_path):
+    """Host 0 of 2 saves alone: finalize must give up after its timeout
+    without publishing; once host 1's shard+commit lands, an explicit
+    re-finalize publishes and restore merges both shards."""
+    h0 = CheckpointManager(str(tmp_path), host_id=0, expected_hosts=2,
+                           finalize_timeout=0.05)
+    h0.save_sync(3, {"a": np.asarray([1, 2], np.uint32)})
+    assert h0.complete_steps() == []  # torn: invisible to restore
+    assert not h0._try_finalize(3)  # still only one commit marker
+    try:
+        h0.restore({"a": np.zeros(2, np.uint32)})
+        raise AssertionError("restore must not see a torn checkpoint")
+    except FileNotFoundError:
+        pass
+    h1 = CheckpointManager(str(tmp_path), host_id=1, expected_hosts=2,
+                           finalize_timeout=0.05)
+    h1.save_sync(3, {"b": np.asarray([3.0], np.float32)})
+    assert h0._try_finalize(3, timeout=5.0)
+    assert h0.complete_steps() == [3]
+    got, _ = h0.restore({"a": np.zeros(2, np.uint32),
+                         "b": np.zeros(1, np.float32)})
+    np.testing.assert_array_equal(got["a"], [1, 2])
+    np.testing.assert_array_equal(got["b"], [3.0])
+
+
+def test_uint32_counters_round_trip_bit_exact(tmp_path):
+    """The rung-4 snapshot payload: a live engine's QoS + block-pool
+    semaphores (uint32 tickets/grants WRAPPED past 2³²−K) restore with
+    identical dtype and bits."""
+    eng = tcp._mk_chunked([0.0], wrap=True)
+    eng.submit_batch(tcp._workload(3, 8, 0.0))
+    eng.megastep(6, token_fn=rid_token_fn,
+                 nows=np.asarray([k * DT for k in range(6)], np.float32))
+    tree = {"qos": eng.qos, "kv": eng._kv_state}
+    m = CheckpointManager(str(tmp_path))
+    m.save_sync(1, tree)
+    got, _ = m.restore(tree)
+    leaves_a = jax.tree_util.tree_leaves(tree)
+    leaves_b = jax.tree_util.tree_leaves(got)
+    assert len(leaves_a) == len(leaves_b) and leaves_a
+    wrapped = False
+    for a, b in zip(leaves_a, leaves_b):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+        if a.dtype == np.uint32 and (a > np.uint32(1 << 31)).any():
+            wrapped = True
+    assert wrapped  # the workload really exercised wrapped counters

@@ -1,0 +1,117 @@
+"""DistributedTicketLease wait discipline (PR 7 satellite).
+
+  * jittered exponential backoff replaces the fixed poll period: waiters
+    under contention still acquire strictly FCFS, and the per-lease retry
+    counters (`wait_telemetry`) surface how they waited;
+  * lease heartbeats: a waiter renews ``<name>/hb/<ticket>`` while
+    queued AND on acquisition; holders renew via :meth:`renew`;
+    ``heartbeat_age`` is None for a ticket that never breathed;
+  * the tombstone timeout path counts into ``timeouts`` and never wedges
+    the grant sequence (the existing cancellation semantics, re-pinned
+    under the new backoff loop);
+  * seeded jitter is deterministic: two leases with the same
+    ``backoff_seed`` draw identical jitter streams.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.runtime.coordinator import DistributedTicketLease, KVStore
+
+
+def test_contended_acquires_fcfs_with_backoff():
+    kv = KVStore()
+    lease = DistributedTicketLease(kv, "bk", capacity=2, backoff_seed=7,
+                                   backoff_base=0.001, backoff_cap=0.02)
+    order = []
+    lock = threading.Lock()
+
+    def worker(i):
+        t = lease.acquire(timeout=10.0)
+        with lock:
+            order.append((t, i))
+        time.sleep(0.01)
+        lease.release()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+        time.sleep(0.002)  # stagger submissions so tickets are ordered
+    for t in threads:
+        t.join()
+    tickets = [t for t, _ in sorted(order)]
+    assert len(tickets) == 6 and len(set(tickets)) == 6
+    tel = lease.wait_telemetry()
+    assert tel["acquires"] == 6
+    assert tel["timeouts"] == 0
+    assert tel["queue_depth"] == 0
+    assert tel["heartbeats"] >= 6  # at least the holder baseline each
+
+
+def test_heartbeat_renewal_and_age():
+    kv = KVStore()
+    lease = DistributedTicketLease(kv, "hb", capacity=1, backoff_seed=1)
+    assert lease.heartbeat_age(999) is None  # never breathed
+    t = lease.acquire(timeout=5.0)
+    age = lease.heartbeat_age(t)
+    assert age is not None and age < 1.0
+    before = lease.retry_counts["heartbeats"]
+    lease.renew(t)
+    assert lease.retry_counts["heartbeats"] == before + 1
+    lease.release()
+
+
+def test_waiter_renews_heartbeat_while_queued():
+    kv = KVStore()
+    lease = DistributedTicketLease(kv, "wq", capacity=1, backoff_seed=3,
+                                   heartbeat_interval=0.02,
+                                   backoff_base=0.001, backoff_cap=0.01)
+    lease.acquire(timeout=5.0)  # hold the only slot
+    got = []
+
+    def waiter():
+        got.append(lease.acquire(timeout=5.0))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.15)  # the queued waiter must have renewed by now
+    waiting_ticket = kv.get("wq/ticket") - 1  # the newest ticket drawn
+    assert lease.heartbeat_age(waiting_ticket) is not None
+    assert lease.heartbeat_age(waiting_ticket) < 1.0
+    lease.release()
+    th.join()
+    assert got and got[0] == waiting_ticket
+    lease.release()
+
+
+def test_timeout_counts_and_grant_not_wedged():
+    kv = KVStore()
+    lease = DistributedTicketLease(kv, "to", capacity=1, backoff_seed=5,
+                                   backoff_base=0.001, backoff_cap=0.01)
+    lease.acquire(timeout=5.0)
+    try:
+        lease.acquire(timeout=0.1)
+        raise AssertionError("second acquire must time out")
+    except TimeoutError:
+        pass
+    assert lease.wait_telemetry()["timeouts"] == 1
+    assert lease.retry_counts["near"] + lease.retry_counts["far"] >= 1
+    # the tombstoned ticket must not wedge the sequence: release flows
+    # the slot past the dead ticket to the next live waiter
+    done = []
+    th = threading.Thread(
+        target=lambda: done.append(lease.acquire(timeout=5.0)))
+    th.start()
+    lease.release()
+    th.join(timeout=5.0)
+    assert done, "tombstone wedged the grant sequence"
+    lease.release()
+
+
+def test_backoff_jitter_seed_deterministic():
+    a = DistributedTicketLease(KVStore(), "j", backoff_seed=42)
+    b = DistributedTicketLease(KVStore(), "j", backoff_seed=42)
+    assert [a._jitter.random() for _ in range(8)] == \
+        [b._jitter.random() for _ in range(8)]

@@ -52,7 +52,7 @@ _SAMPLE_KEYS = {
     "round", "clock", "admits", "expires", "preempts", "tokens",
     "prefill_tokens", "prefill_chunks", "prefill_pending", "gate_stalls",
     "parked", "backlog", "active", "slot_free", "kv_free", "kv_pokes",
-    "credit", "poke_dead", "kv_wait_hist",
+    "health", "credit", "poke_dead", "kv_wait_hist",
 }
 
 _CLOCK_FIELDS = ("submit_clock", "first_tok_clock", "last_tok_clock",

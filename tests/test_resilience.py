@@ -1,0 +1,460 @@
+"""Self-healing serving engine (PR 7) — sentinels, faults, recovery ladder.
+
+  * sentinel units: health-bit layout (mirrored vs deep), decode_health,
+    clean runs report an all-zero health stream on both serving paths;
+  * `faults.FaultPlan` is seed-deterministic (same seed → byte-identical
+    schedule) and each injector actually trips its sentinel bit:
+    KV_COUNTER → ``H_KV_CONSERVE``, STUCK_SLOT (+ watchdog) →
+    ``H_STUCK``, NAN_LOGIT → ``H_NAN``, DOUBLE_RELEASE → the deep
+    device-side partition/conservation bits;
+  * `scheduler.quarantine` releases the slot's blocks (host mirror AND
+    persistent device pool), returns the slot unit to admission, resets
+    the request, and the engine still audits clean and drains;
+  * `scheduler.audit_kv` rebuilds the free queue / block semaphore from
+    block-table ground truth after counter corruption and aliasing;
+  * tentpole chaos property: random seeded FaultPlans (capacity kinds)
+    against a chunked block-paged engine on BOTH drives — every request
+    reaches a terminal state, the exit audit is clean, and the ladder's
+    recovery counters surface in ``telemetry()["recovery"]``;
+  * tentpole equivalence property: a host-loop ResilientEngine and a
+    megastep ResilientEngine fed the SAME plan stay bit-identical —
+    token streams, stats, recovery actions, and the telemetry stream
+    (deep device-only health bits masked) — incl. 2³² QoS ticket wrap;
+  * rung 4: a mid-run CRASH restores the snapshot (through
+    `checkpoint.manager.CheckpointManager`) and the deterministic replay
+    converges to the exact final state of the uncrashed run; NAN poison
+    escalates straight to rung 4 and the restore clears it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+import test_chunked_prefill as tcp
+import test_megastep as tms
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.resilience import (
+    CAPACITY_KINDS,
+    CRASH,
+    DOUBLE_RELEASE,
+    FaultEvent,
+    FaultPlan,
+    KV_COUNTER,
+    NAN_LOGIT,
+    STUCK_SLOT,
+    ResilientEngine,
+    apply_fault,
+    exit_audit,
+)
+from repro.serving import sentinels as sn
+from repro.serving.engine_state import rid_token_fn
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+DT = tms.DT
+_IDENT = tms._IDENT
+_rid_step_fn = tms._rid_step_fn
+
+
+def _mk_eng(clk, *, watchdog=0, n_slots=4, kv_pool=(16, 4),
+            chunked=(5, 9, 16), use_kernel=True, wrap=False):
+    """The chunked block-paged engine of tests/test_chunked_prefill.py,
+    plus the PR-7 watchdog — the richest state for faults to corrupt."""
+    eng = ContinuousBatchingEngine(
+        _rid_step_fn, lambda r: None, n_slots,
+        tenants={"gold": 2.0, "bronze": 1.0}, use_kernel=use_kernel,
+        clock=lambda: clk[0], kv_pool=kv_pool, chunked_prefill=chunked,
+        prompt_cap=32, watchdog=watchdog)
+    eng._clock_box = clk
+    if wrap:
+        base = jnp.uint32((1 << 32) - 7)
+        eng.qos = eng.qos._replace(
+            ticket=jnp.full((2,), base), grant=jnp.full((2,), base),
+            consumed=jnp.full((2,), base))
+    return eng
+
+
+def _drain(rz, reqs, *, mega, max_rounds=240, K=8):
+    """Drive a ResilientEngine until every request reaches a terminal
+    state and no requeue is pending (round-indexed virtual clock, so
+    rung-4 rewinds stay time-consistent)."""
+    eng = rz.engine
+    spent = 0
+    while spent < max_rounds:
+        if (all(q.done_event.is_set() for q in reqs)
+                and not rz._retryq and not eng.active):
+            break
+        if mega:
+            base = eng._round_no
+            nows = np.asarray([(base + k) * DT for k in range(K)],
+                              np.float32)
+            rz.megastep(K, token_fn=rid_token_fn, nows=nows)
+            spent += K
+        else:
+            eng._clock_box[0] = eng._round_no * DT
+            rz.step(_IDENT)
+            spent += 1
+    return spent
+
+
+# ------------------------------------------------------- sentinel units ----
+
+
+def test_health_bit_layout():
+    """Every bit is a distinct power of two; the mirrored mask separates
+    the host-computable bits from the deep device-only ones."""
+    bits = list(sn.HEALTH_BITS.values())
+    assert len(set(bits)) == len(bits)
+    for b in bits:
+        assert b > 0 and b & (b - 1) == 0
+    for b in (sn.H_SLOT_CONSERVE, sn.H_CREDIT_NEG, sn.H_KV_CONSERVE,
+              sn.H_BANKER, sn.H_STUCK):
+        assert b & sn.HEALTH_MIRRORED_MASK
+    for b in (sn.H_KV_PARTITION, sn.H_NAN):
+        assert not b & sn.HEALTH_MIRRORED_MASK
+
+
+def test_decode_health():
+    assert sn.decode_health(0) == []
+    got = set(sn.decode_health(sn.H_STUCK | sn.H_KV_CONSERVE | sn.H_NAN))
+    assert got == {"stuck", "kv_conserve", "nan"}
+
+
+def test_clean_run_health_all_zero_both_paths():
+    """A fault-free run reports health == 0 every round on the host loop
+    AND through the in-scan ring (sentinels add no false positives)."""
+    for mega in (False, True):
+        eng = _mk_eng([0.0], watchdog=6)
+        reqs = tcp._workload(3, 10, 0.0)
+        rz = ResilientEngine(eng)
+        eng.submit_batch(reqs)
+        _drain(rz, reqs, mega=mega)
+        assert all(q.done_event.is_set() for q in reqs), mega
+        assert rz.samples and all(s["health"] == 0 for s in rz.samples)
+        assert rz.audit()["ok"]
+        assert not rz.events
+
+
+# ----------------------------------------------------- fault-plan units ----
+
+
+def test_fault_plan_seed_deterministic():
+    a = FaultPlan.random(123, rounds=40, n_faults=6)
+    assert a == FaultPlan.random(123, rounds=40, n_faults=6)
+    assert a != FaultPlan.random(124, rounds=40, n_faults=6)
+    assert len(a.events) == 6
+    assert all(1 <= e.round < 40 for e in a.events)
+    assert all(e.kind in CAPACITY_KINDS for e in a.events)
+    assert all(e.delta < 0 for e in a.events if e.kind == KV_COUNTER)
+    wc = a.with_crash(7)
+    assert len(wc.events) == 7
+    assert [e for e in wc.events if e.kind == "crash"][0].round == 7
+    assert a == FaultPlan.random(123, rounds=40, n_faults=6)  # no state
+
+
+def test_kv_counter_leak_trips_conserve_bit_and_audit_repairs():
+    """KV_COUNTER (delta<0) leaks free blocks → H_KV_CONSERVE fires the
+    very next round; audit_kv reconciles the counter and the stream goes
+    healthy again."""
+    eng = _mk_eng([0.0])
+    eng.submit_batch(tcp._workload(9, 6, 0.0))
+    for k in range(3):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+    assert apply_fault(eng, FaultEvent(round=3, kind=KV_COUNTER, delta=-2))
+    eng._clock_box[0] = 3 * DT
+    eng.step(_IDENT)
+    assert eng.telemetry()["last_samples"][-1]["health"] & sn.H_KV_CONSERVE
+    rep = eng.audit_kv()
+    assert rep["counter_drift"] == 2 and not rep["victims"]
+    eng._clock_box[0] = 4 * DT
+    eng.step(_IDENT)
+    assert eng.telemetry()["last_samples"][-1]["health"] == 0
+    assert exit_audit(eng)["ok"]
+
+
+def test_stuck_slot_watchdog_fires():
+    """A force-parked slot that nothing pokes stops advancing; after W
+    rounds the watchdog raises H_STUCK (host mirror of the in-scan
+    last_adv check)."""
+    eng = _mk_eng([0.0], watchdog=3)
+    eng.submit_batch(tcp._workload(11, 3, 0.0))
+    for k in range(2):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+    assert apply_fault(eng, FaultEvent(round=2, kind=STUCK_SLOT, arg=5))
+    hit = False
+    for k in range(2, 14):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+        if eng.telemetry()["last_samples"][-1]["health"] & sn.H_STUCK:
+            hit = True
+            break
+    assert hit
+
+
+def test_nan_logit_sticky_until_cleared():
+    """NAN_LOGIT poisons persistently: H_NAN stays set round after round
+    (the sticky host mirror of a poisoned device model)."""
+    eng = _mk_eng([0.0])
+    eng.submit_batch(tcp._workload(13, 4, 0.0))
+    eng._clock_box[0] = 0.0
+    eng.step(_IDENT)
+    assert apply_fault(eng, FaultEvent(round=1, kind=NAN_LOGIT))
+    for k in range(1, 4):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+        assert eng.telemetry()["last_samples"][-1]["health"] & sn.H_NAN
+
+
+# ----------------------------------------------- quarantine / audit_kv ----
+
+
+def test_quarantine_releases_blocks_and_request_refinishes():
+    eng = _mk_eng([0.0])
+    reqs = tcp._workload(5, 6, 0.0)
+    eng.submit_batch(reqs)
+    for k in range(4):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+    assert eng.active
+    slot = sorted(eng.active)[0]
+    victim = eng.active[slot]
+    free_before = eng._kv_free_blocks
+    held = victim.kv_blocks
+    req = eng.quarantine(slot)
+    assert req is victim
+    assert slot in eng.free_slots and slot not in eng.active
+    assert eng._kv_free_blocks == free_before + held
+    assert req.slot is None and req.out_tokens == [] and req.kv_blocks == 0
+    assert not req.done_event.is_set()  # still in flight
+    assert eng.stats.quarantined == 1
+    assert exit_audit(eng)["ok"]
+    eng.submit(req)  # a quarantined request can go around again
+    for k in range(4, 160):
+        eng._clock_box[0] = k * DT
+        eng.step(_IDENT)
+        if all(r.done_event.is_set() for r in reqs):
+            break
+    assert all(r.done_event.is_set() for r in reqs)
+    assert exit_audit(eng)["ok"]
+
+
+def test_quarantine_on_megastep_engine_releases_device_pool():
+    """On the scanned path the device block table is ground truth: the
+    quarantined slot's pool row must be released (counter + free queue +
+    pokes), its table row cleared, and the host mirrors resynced."""
+    eng = _mk_eng([0.0])
+    reqs = tcp._workload(5, 6, 0.0)
+    eng.submit_batch(reqs)
+    eng.megastep(4, token_fn=rid_token_fn,
+                 nows=np.asarray([k * DT for k in range(4)], np.float32))
+    assert eng.active
+    slot = sorted(eng.active)[0]
+    eng.quarantine(slot)
+    tbl = np.asarray(eng._kv_state.tbl)
+    assert (tbl[slot] == -1).all()
+    assert exit_audit(eng)["ok"]  # free ∪ tables is a permutation again
+
+
+def test_double_release_detected_in_scan_and_audit_rebuilds():
+    """DOUBLE_RELEASE aliases a live block into the free queue — only the
+    device physically holds block identities, so the DEEP sentinel bits
+    catch it in-scan; audit_kv rebuilds the partition from the tables and
+    quarantining the aliasing victims makes the exit audit clean."""
+    eng = _mk_eng([0.0])
+    eng.submit_batch(tcp._workload(7, 8, 0.0))
+    eng.megastep(6, token_fn=rid_token_fn,
+                 nows=np.asarray([k * DT for k in range(6)], np.float32))
+    assert any(r.kv_blocks for r in eng.active.values())
+    assert apply_fault(eng, FaultEvent(round=6, kind=DOUBLE_RELEASE))
+    eng.megastep(2, token_fn=rid_token_fn,
+                 nows=np.asarray([(6 + k) * DT for k in range(2)],
+                                 np.float32))
+    h = 0
+    for s in eng.telemetry()["last_samples"]:
+        h |= s["health"]
+    assert h & (sn.H_KV_PARTITION | sn.H_KV_CONSERVE)
+    rep = eng.audit_kv()
+    for s in rep["victims"]:
+        if s in eng.active:
+            eng.quarantine(s)
+    assert exit_audit(eng)["ok"]
+    assert eng.stats.kv_audits == 1
+
+
+# --------------------------------------------------- tentpole: chaos ----
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_chaos_property_drains_and_audits_clean(seed, mega):
+    """ISSUE acceptance: under a random seeded FaultPlan of capacity
+    faults the self-healing engine still drains EVERY request to a
+    terminal state and exits with zero invariant violations; recovery
+    actions surface in telemetry()["recovery"]."""
+    eng = _mk_eng([0.0], watchdog=4)
+    reqs = tcp._workload(seed, 10, 0.0)
+    plan = FaultPlan.random(seed, rounds=24, n_faults=4,
+                            kinds=CAPACITY_KINDS)
+    rz = ResilientEngine(eng, plan=plan, react_every=2, retry_budget=2,
+                         seed=seed)
+    eng.submit_batch(reqs)
+    _drain(rz, reqs, mega=mega)
+    assert all(q.done_event.is_set() for q in reqs), \
+        (seed, mega, [q.rid for q in reqs if not q.done_event.is_set()])
+    audit = rz.audit()
+    assert audit["ok"], (seed, mega, audit)
+    rec = rz.telemetry()["recovery"]
+    assert set(rec) == {"quarantined", "requeued", "kv_audits",
+                        "kernel_fallbacks", "snapshots", "restores"}
+    injected = [e for e in rz.events
+                if e["action"] == "inject" and e["applied"]]
+    if any(e["kind"] == KV_COUNTER for e in injected):
+        assert rec["kv_audits"] >= 1  # the leak forced a rung-2 audit
+    assert rec["requeued"] + rec["quarantined"] >= rec["requeued"]
+
+
+# --------------------------------------------- tentpole: equivalence ----
+
+
+def _compare_resilient(seed, deadline_frac, wrap, K=16, n_req=12):
+    """Host-loop ResilientEngine vs megastep ResilientEngine, one shared
+    FaultPlan: every observable matches round-for-round (deep
+    device-only health bits masked)."""
+    eh = _mk_eng([0.0], watchdog=3, wrap=wrap)
+    em = _mk_eng([0.0], watchdog=3, wrap=wrap)
+    rh = tcp._workload(seed, n_req, deadline_frac)
+    rm = tcp._workload(seed, n_req, deadline_frac)
+    plan = FaultPlan.random(seed, rounds=K, n_faults=3,
+                            kinds=CAPACITY_KINDS)
+    rzh = ResilientEngine(eh, plan=plan, react_every=4, seed=seed)
+    rzm = ResilientEngine(em, plan=plan, react_every=4, seed=seed)
+    eh.submit_batch(rh)
+    em.submit_batch(rm)
+    times = [k * DT for k in range(K)]
+    for t in times:
+        eh._clock_box[0] = t
+        rzh.step(_IDENT)
+    em._clock_box[0] = 0.0
+    rzm.megastep(K, token_fn=rid_token_fn,
+                 nows=np.asarray(times, np.float32))
+
+    tag = f"seed={seed} wrap={wrap}"
+    for a, b in zip(rh, rm):
+        assert a.out_tokens == b.out_tokens, (tag, a.rid)
+        assert a.admit_round == b.admit_round, (tag, a.rid)
+        assert a.expired == b.expired and a.preempted == b.preempted, \
+            (tag, a.rid)
+        assert a.retries == b.retries, (tag, a.rid)
+    assert len(rzh.samples) == len(rzm.samples) == K, tag
+    for k, (a, b) in enumerate(zip(rzh.samples, rzm.samples)):
+        assert set(a) == set(b), (tag, k)
+        for key in a:
+            va, vb = a[key], b[key]
+            if key == "health":  # deep bits are device-only by design
+                va &= sn.HEALTH_MIRRORED_MASK
+                vb &= sn.HEALTH_MIRRORED_MASK
+            assert va == vb, (tag, k, key, a[key], b[key])
+    for f in ("finished", "expired", "preempted", "admitted", "quarantined",
+              "requeued", "kv_audits", "kernel_fallbacks"):
+        assert getattr(eh.stats, f) == getattr(em.stats, f), (tag, f)
+    for f in eh.qos._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(eh.qos, f)), np.asarray(getattr(em.qos, f)),
+            err_msg=f"{tag}:{f}")
+    assert eh._qos_free == em._qos_free, tag
+    assert eh._kv_free_blocks == em._kv_free_blocks, tag
+    acts_h = [(e["round"], e["action"]) for e in rzh.events]
+    acts_m = [(e["round"], e["action"]) for e in rzm.events]
+    assert acts_h == acts_m, tag  # the ladder took identical actions
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.0, 0.4]),
+       st.booleans())
+def test_resilient_megastep_equals_host_loop_property(seed, deadline_frac,
+                                                      wrap):
+    """ISSUE acceptance: megastep(K) ≡ K·step() SURVIVES fault injection
+    and recovery — both drives inject, detect, and heal at identical
+    round boundaries, incl. 2³² QoS ticket wrap."""
+    _compare_resilient(seed, deadline_frac, wrap)
+
+
+# ------------------------------------------------- rung 4: crash/NaN ----
+
+
+def test_crash_restore_replays_to_identical_state(tmp_path):
+    """ISSUE acceptance: a mid-run CRASH (snapshot → restore →
+    deterministic replay) converges to the exact final state of the
+    uncrashed run."""
+    K = 20
+    base_plan = FaultPlan.random(5, rounds=K, n_faults=2,
+                                 kinds=CAPACITY_KINDS)
+    outs = []
+    for crash_round in (None, 9):
+        eng = _mk_eng([0.0], watchdog=4)
+        reqs = tcp._workload(5, 10, 0.0)
+        plan = (base_plan if crash_round is None
+                else base_plan.with_crash(crash_round))
+        ck = CheckpointManager(str(tmp_path / f"ck_{crash_round}"), keep=8)
+        rz = ResilientEngine(eng, plan=plan, react_every=2, seed=5,
+                             ckpt=ck, snapshot_every=4)
+        eng.submit_batch(reqs)
+        rz.megastep(K, token_fn=rid_token_fn,
+                    nows=np.asarray([k * DT for k in range(K)],
+                                    np.float32))
+        assert rz.audit()["ok"]
+        outs.append((rz, eng, [list(r.out_tokens) for r in reqs],
+                     [(r.expired, r.admit_round) for r in reqs]))
+    (rz0, e0, tok0, meta0), (rz1, e1, tok1, meta1) = outs
+    assert tok1 == tok0
+    assert meta1 == meta0
+    assert e1.stats.restores >= 1 and e1.stats.snapshots >= 1
+    assert e0.stats.restores == 0
+    assert any(e["action"] == "crash" for e in rz1.events)
+    assert e1.stats.finished == e0.stats.finished
+    np.testing.assert_array_equal(np.asarray(e0.qos.grant),
+                                  np.asarray(e1.qos.grant))
+
+
+def test_crash_on_host_loop_restores_and_drains(tmp_path):
+    """The host drive's crash path: restore + in-place replay inside
+    step(), then the run drains clean."""
+    eng = _mk_eng([0.0], watchdog=4)
+    reqs = tcp._workload(17, 8, 0.0)
+    plan = FaultPlan(seed=0, events=(FaultEvent(round=6, kind=CRASH),))
+    ck = CheckpointManager(str(tmp_path), keep=8)
+    rz = ResilientEngine(eng, plan=plan, react_every=2, seed=0, ckpt=ck,
+                         snapshot_every=4)
+    eng.submit_batch(reqs)
+    _drain(rz, reqs, mega=False)
+    assert all(r.done_event.is_set() for r in reqs)
+    assert eng.stats.restores == 1
+    assert rz.audit()["ok"]
+
+
+def test_nan_escalates_to_rung4_restore(tmp_path):
+    """NAN health skips the lower rungs (nothing below a restore can
+    un-poison a model): the sticky flag is cleared by the snapshot
+    restore and the run finishes clean."""
+    eng = _mk_eng([0.0], watchdog=0)
+    reqs = tcp._workload(13, 8, 0.0)
+    plan = FaultPlan(seed=0, events=(FaultEvent(round=5, kind=NAN_LOGIT),))
+    ck = CheckpointManager(str(tmp_path), keep=8)
+    rz = ResilientEngine(eng, plan=plan, react_every=2, seed=0, ckpt=ck,
+                         snapshot_every=4)
+    eng.submit_batch(reqs)
+    _drain(rz, reqs, mega=False)
+    assert all(r.done_event.is_set() for r in reqs)
+    assert eng.stats.restores >= 1
+    assert not eng._nonfinite_sticky
+    assert rz.audit()["ok"]
+    assert rz.samples[-1]["health"] == 0
