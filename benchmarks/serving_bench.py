@@ -598,6 +598,54 @@ def run_resilience(metrics: dict | None = None) -> list[str]:
     return lines
 
 
+def run_cluster(metrics: dict | None = None) -> list[str]:
+    """Cluster fabric (PR 8): tokens/s and p99 TTFT over 4 replica
+    engines behind the replica router, fault-free vs one replica KILLED
+    mid-megastep — the cost of detection + exactly-once migration is a
+    TTFT tail and a modest throughput dip, never a lost or doubled
+    request."""
+    from repro.resilience.faults import REPLICA_KILL, FaultEvent, FaultPlan
+    from repro.serving.router import toy_cluster, toy_workload
+
+    n_req = 24 if _quick() else 48
+    lines = ["", "== Cluster fabric: replica kill vs fault-free (4 replicas) ==",
+             f"{'scenario':>12} {'done':>5} {'shed':>5} {'rounds':>7} "
+             f"{'tok/s':>9} {'p99 ttft':>9} {'migr':>5} {'wall s':>7}"]
+    out = {}
+    for name, plan in (
+            ("fault-free", None),
+            ("1 killed", FaultPlan(seed=0, events=(
+                FaultEvent(round=2, kind=REPLICA_KILL, arg=1, delta=2),))),
+    ):
+        r = toy_cluster(4, seed=0, plan=plan, capacity=4)
+        r.submit_batch(toy_workload(n_req, seed=9))
+        t0 = time.perf_counter()
+        rep = r.run(max_rounds=300)
+        wall = time.perf_counter() - t0
+        toks = sum(len(t) for t in r.completed.values())
+        ttfts = sorted(cr.ttft for cr in r.requests.values()
+                       if cr.ttft is not None)
+        p99 = float(np.percentile(ttfts, 99)) if ttfts else float("nan")
+        vt = rep["rounds"] * 1.0  # virtual seconds (inner_k·dt per round)
+        st = rep["stats"]
+        assert rep["lease_audit"]["ok"], rep["lease_audit"]["violations"]
+        assert st["completed"] + len(rep["shed"]) == n_req
+        lines.append(f"{name:>12} {st['completed']:>5} {len(rep['shed']):>5} "
+                     f"{rep['rounds']:>7} {toks / vt:>9.1f} {p99:>9.2f} "
+                     f"{st['migrated']:>5} {wall:>7.2f}")
+        out[name.replace(" ", "_").replace("-", "_")] = {
+            "completed": st["completed"], "shed": len(rep["shed"]),
+            "rounds": rep["rounds"], "tok_per_vs": round(toks / vt, 2),
+            "p99_ttft": round(p99, 3), "migrated": st["migrated"],
+            "wall_s": round(wall, 3)}
+    lines.append("→ virtual-time tokens/s and the TTFT tail absorb the "
+                 "detection TTL + migration backoff; the lease audit stays "
+                 "clean in both scenarios (no unit lost with the replica)")
+    if metrics is not None:
+        metrics["cluster"] = out
+    return lines
+
+
 def run(metrics: dict | None = None) -> str:
     lines = ["== Serving scheduler: TWA buckets vs global rescan ==",
              f"{'backlog':>8} {'mode':>8} {'examined':>10} {'skipped':>10} {'wall s':>8}"]
@@ -642,6 +690,7 @@ def run(metrics: dict | None = None) -> str:
     lines.extend(run_longprompt(metrics))
     lines.extend(run_slo(metrics))
     lines.extend(run_resilience(metrics))
+    lines.extend(run_cluster(metrics))
     return "\n".join(lines)
 
 

@@ -15,7 +15,17 @@ Run:  PYTHONPATH=src python examples/serve_multitenant.py [--kernel]
                                                           [--megastep]
                                                           [--paged]
                                                           [--chaos [seed]]
+                                                          [--cluster [seed]]
                                                           [--trace]
+
+Cluster fabric (``--cluster [seed]``): four replica engines behind
+`repro.serving.router.ReplicaRouter` — per-replica in-flight capacity as
+a cluster-level TWA lease, a heartbeat reaper, exactly-once request
+migration off dead replicas (warm takeover from the last checkpoint
+snapshot where available), a per-replica circuit breaker — driven
+through a seeded cluster FaultPlan (replica kill mid-megastep, KV
+partition with zombie fencing, straggler, leaked lease) and verified
+bit-identical against a fault-free twin.
 
 Self-healing (``--chaos [seed]``): drives a chunked block-paged engine
 through a seeded `repro.resilience.FaultPlan` (dropped pokes, counter
@@ -91,13 +101,13 @@ def _make_obs(trace: bool, path: str, ttft_target: float):
                      smooth_window=9)
 
 
-def _finish_trace(obs, path: str) -> None:
+def _finish_trace(obs, path: str, recovery: dict | None = None) -> None:
     if obs is None:
         return
     n = obs.sinks[0].emitted
     obs.close()
     print(f"[trace] {n} per-round records streamed to {path}")
-    print(obs.render_table())
+    print(obs.render_table(recovery=recovery))
 
 
 def main_paged(K: int = 16, trace: bool = False) -> None:
@@ -216,10 +226,75 @@ def main_chaos(seed: int = 0, K: int = 8, trace: bool = False) -> None:
         assert all(r.done_event.is_set() for r in reqs), \
             "chaos run failed to drain"
         assert audit["ok"], audit["violations"]
-        _finish_trace(obs, trace_path)
+        _finish_trace(obs, trace_path, rec)
         print("[example] fault injection + recovery ladder OK "
               f"(drained {len(reqs)} requests under {len(plan.events)} "
               "injected faults, exit audit clean)")
+
+
+def main_cluster(seed: int = 0, trace: bool = False) -> None:
+    """Fault-tolerant multi-engine fabric (``--cluster [seed]``): four
+    replica engines behind `repro.serving.router.ReplicaRouter` — each
+    replica's in-flight capacity a cluster-level `DistributedTicketLease`
+    (grant − ticket = headroom routes the bind), a `LeaseReaper` freeing
+    what dead holders leak — driven through a seeded CLUSTER FaultPlan:
+    one replica killed mid-megastep, one stalled behind a KV partition
+    (declared dead, keeps running as a zombie, fenced when the partition
+    heals), one straggler, one leaked lease ticket.  Every accepted
+    request completes exactly once or is shed with a recorded reason;
+    surviving token streams are bit-identical to a fault-free run; the
+    final grant sequence of every lease is clean."""
+    from repro.resilience import FaultPlan
+    from repro.serving.router import toy_cluster, toy_workload
+
+    trace_path = "trace_multitenant.jsonl"
+    plan = FaultPlan.cluster(seed + 3, rounds=10, n_replicas=4)
+    work = toy_workload(12, seed=seed + 2)
+
+    baseline = toy_cluster(4, seed=seed)
+    baseline.submit_batch(toy_workload(12, seed=seed + 2))
+    baseline.run(max_rounds=150)
+
+    obs = _make_obs(trace, trace_path, ttft_target=30.0)
+    router = toy_cluster(4, seed=seed, plan=plan, standby=True,
+                         snapshot_every=4, obs=obs)
+    router.submit_batch(work)
+    report = router.run(max_rounds=150)
+
+    print(f"[cluster] plan seed={seed + 3}: "
+          + ", ".join(f"r{e.round}:{e.kind}@{e.arg}" for e in plan.events))
+    for e in router.events:
+        if e["action"] in ("inject", "replica_killed", "replica_dead",
+                           "warm_takeover", "fenced", "shed", "reap",
+                           "duplicate_suppressed"):
+            extra = {k: v for k, v in e.items()
+                     if k not in ("round", "action")}
+            print(f"[cluster]   round {e['round']:>3} {e['action']:<20} "
+                  f"{extra}")
+    st = report["stats"]
+    print(f"[cluster] completed={st['completed']} shed={report['shed']} "
+          f"migrated={st['migrated']} adopted={st['adopted']} "
+          f"dupes_suppressed={st['duplicates_suppressed']} "
+          f"orphans_reaped={st['orphans_reaped']}")
+    done = set(router.completed)
+    shed = set(report["shed"])
+    assert done | shed == {cr.rid for cr in work} and not (done & shed), \
+        "exactly-once violated"
+    for rid in done & set(baseline.completed):
+        assert router.completed[rid] == baseline.completed[rid], \
+            f"rid {rid} stream diverged from fault-free run"
+    assert report["lease_audit"]["ok"], report["lease_audit"]["violations"]
+    assert all(a["ok"] for a in report["engine_audits"].values())
+    recovery = None
+    if obs is not None:
+        recovery = {}
+        for rep in router.replicas:
+            for k, v in rep.eng.telemetry()["recovery"].items():
+                recovery[k] = recovery.get(k, 0) + v
+    _finish_trace(obs, trace_path, recovery)
+    print("[example] replica router + reaper + exactly-once migration OK "
+          f"({st['replicas_dead']} replicas died, "
+          f"{st['successors']} warm successors, streams bit-identical)")
 
 
 def main(use_kernel: bool = False, use_megastep: bool = False, K: int = 16,
@@ -287,6 +362,10 @@ if __name__ == "__main__":
         rest = sys.argv[sys.argv.index("--chaos") + 1:]
         main_chaos(seed=int(rest[0]) if rest and rest[0].isdigit() else 0,
                    trace=trace)
+    elif "--cluster" in sys.argv[1:]:
+        rest = sys.argv[sys.argv.index("--cluster") + 1:]
+        main_cluster(seed=int(rest[0]) if rest and rest[0].isdigit() else 0,
+                     trace=trace)
     elif "--paged" in sys.argv[1:]:
         main_paged(trace=trace)
     else:

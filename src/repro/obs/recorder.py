@@ -43,6 +43,9 @@ class EngineObs:
         self._resolution = resolution
         self.tenants: dict[str, TenantSLO] = {}
         self.rounds = 0
+        self.health_mask = 0        # OR of every round's sentinel bitmask
+        self.sick_rounds = 0        # rounds with any sentinel bit set
+        self.tenant_retries: dict[str, int] = {}  # recovery requeues seen
         self._smoother = (TraceSmoother(_SMOOTH_FIELDS, smooth_window)
                           if smooth_window > 1 else None)
 
@@ -50,6 +53,10 @@ class EngineObs:
 
     def record_round(self, sample: dict) -> None:
         self.rounds += 1
+        h = int(sample.get("health", 0))
+        if h:
+            self.health_mask |= h
+            self.sick_rounds += 1
         record = sample
         if self._smoother is not None:
             record = dict(sample)
@@ -60,6 +67,9 @@ class EngineObs:
     def record_request(self, req) -> None:
         """A resolved request (finished / tombstoned / preempted)."""
         t = getattr(req, "tenant_id", "default")
+        retries = int(getattr(req, "retries", 0))
+        if retries:
+            self.tenant_retries[t] = self.tenant_retries.get(t, 0) + retries
         slo = self.tenants.get(t)
         if slo is None:
             slo = self.tenants[t] = TenantSLO(
@@ -78,13 +88,19 @@ class EngineObs:
     def summary(self) -> dict:
         return {
             "rounds": self.rounds,
+            "health": {"mask": self.health_mask,
+                       "sick_rounds": self.sick_rounds},
+            "retries": dict(sorted(self.tenant_retries.items())),
             "tenants": {t: s.summary() for t, s in sorted(self.tenants.items())},
         }
 
-    def render_table(self) -> str:
-        """Fixed-width per-tenant SLO table (the ``--trace`` exit view)."""
+    def render_table(self, recovery: Optional[dict] = None) -> str:
+        """Fixed-width per-tenant SLO table (the ``--trace`` exit view).
+        ``recovery``: the engine's ``telemetry()["recovery"]`` counters —
+        rendered as a footer with the accumulated health bitmask, so one
+        glance shows WHICH tenants paid for WHICH faults."""
         hdr = (f"{'tenant':<10} {'done':>5} {'exp':>4} {'pre':>4} "
-               f"{'attain':>7} {'ttft p50':>9} {'ttft p99':>9} "
+               f"{'rty':>4} {'attain':>7} {'ttft p50':>9} {'ttft p99':>9} "
                f"{'tpot p50':>9} {'tpot p99':>9}")
         lines = [hdr, "-" * len(hdr)]
 
@@ -95,9 +111,21 @@ class EngineObs:
             r = s.summary()
             lines.append(
                 f"{t:<10} {r['finished']:>5} {r['expired']:>4} "
-                f"{r['preempted']:>4} {fmt(r['attainment']):>7} "
+                f"{r['preempted']:>4} {self.tenant_retries.get(t, 0):>4} "
+                f"{fmt(r['attainment']):>7} "
                 f"{fmt(r['ttft']['p50']):>9} {fmt(r['ttft']['p99']):>9} "
                 f"{fmt(r['tpot']['p50']):>9} {fmt(r['tpot']['p99']):>9}")
+        if self.health_mask:
+            try:
+                from ..serving.sentinels import decode_health
+                names = ",".join(decode_health(self.health_mask))
+            except Exception:
+                names = hex(self.health_mask)
+            lines.append(f"health: 0x{self.health_mask:x} ({names}) over "
+                         f"{self.sick_rounds}/{self.rounds} rounds")
+        if recovery:
+            lines.append("recovery: " + " ".join(
+                f"{k}={v}" for k, v in sorted(recovery.items()) if v))
         return "\n".join(lines)
 
     def close(self) -> None:

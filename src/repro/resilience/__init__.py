@@ -14,12 +14,17 @@ health bitmask through the telemetry ring.  This package closes the loop:
   boundaries and escalates through the recovery ladder: quarantine →
   audit-and-rebuild → kernel fallback → snapshot/restore with replay.
 
-See README.md in this directory for the architecture and the escalation
-policy.
+One level up, the CLUSTER plane reuses the same pieces across replicas:
+``CLUSTER_KINDS`` faults (replica kill, KV partition, lease leak,
+straggler) drive `serving.router.ReplicaRouter` +
+`runtime.reaper.LeaseReaper` — see README.md ("the cluster plane") for
+the failure model and the exactly-once migration contract.
 """
 
 from .faults import (  # noqa: F401
+    BIT_FLIP,
     CAPACITY_KINDS,
+    CLUSTER_KINDS,
     CORRUPTION_KINDS,
     CRASH,
     DOUBLE_RELEASE,
@@ -28,8 +33,14 @@ from .faults import (  # noqa: F401
     FaultPlan,
     InjectedCrash,
     KV_COUNTER,
+    KV_PARTITION,
+    LEASE_LEAK,
     NAN_LOGIT,
+    REPLICA_KILL,
+    STRAGGLER,
     STUCK_SLOT,
+    TORN_SHARD,
     apply_fault,
+    tear_checkpoint,
 )
 from .recovery import ResilientEngine, exit_audit  # noqa: F401

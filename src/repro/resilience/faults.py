@@ -39,10 +39,23 @@ holds, so they are exercised as megastep-side detect-and-recover tests:
   second time (aliasing: ``H_KV_PARTITION``);
 * ``NAN_LOGIT``   — the first float leaf of the device model pytree is
   poisoned with NaN (``H_NAN``); the host mirror sets the engine's
-  sticky nonfinite flag, matching the poison's persistence.
+  sticky nonfinite flag, matching the poison's persistence;
+* ``BIT_FLIP``    — one bit of a live device block-table entry flips
+  (cosmic-ray / DMA corruption): the cell aliases another slot's block
+  or points out of range (``H_KV_PARTITION``).
 
 ``CRASH`` raises :class:`InjectedCrash` at the boundary — the recovery
 ladder's rung-4 trigger (snapshot restore + deterministic replay).
+``TORN_SHARD`` is driver-level like CRASH: `recovery.ResilientEngine`
+tears the newest on-disk checkpoint (:func:`tear_checkpoint`), so the
+next rung-4 restore must fall back to an older snapshot.
+
+**Cluster kinds** (``CLUSTER_KINDS``) target a replica index and are
+consumed by `serving.router.ReplicaRouter` against ROUTER rounds:
+replica kill mid-megastep, KV-store partition window (lost heartbeats +
+zombie completions), leaked lease ticket, slow-host straggler —
+:meth:`FaultPlan.cluster` draws the seeded ladder the acceptance
+property drives.
 """
 
 from __future__ import annotations
@@ -60,11 +73,29 @@ KV_COUNTER = "kv_counter"
 DOUBLE_RELEASE = "double_release"
 NAN_LOGIT = "nan_logit"
 STUCK_SLOT = "stuck_slot"
+BIT_FLIP = "bit_flip"
+TORN_SHARD = "torn_shard"
 CRASH = "crash"
 
 CAPACITY_KINDS = (DROP_POKE, KV_COUNTER, STUCK_SLOT)
-CORRUPTION_KINDS = (DOUBLE_RELEASE, NAN_LOGIT)
+CORRUPTION_KINDS = (DOUBLE_RELEASE, NAN_LOGIT, BIT_FLIP)
 ALL_KINDS = CAPACITY_KINDS + CORRUPTION_KINDS + (CRASH,)
+
+# --- cluster-level fault kinds (serving.router consumes these) -----------
+# A cluster FaultPlan schedules these against ROUTER rounds; ``arg`` is
+# the target replica index.  They never reach `apply_fault` — the router
+# applies them to its own control plane (see serving/router.py):
+REPLICA_KILL = "replica_kill"    # delta: engine rounds INTO the megastep
+#                                  at which the process dies (mid-launch)
+KV_PARTITION = "kv_partition"    # delta: window length in router rounds —
+#                                  heartbeat writes are lost; the replica
+#                                  itself keeps running (zombie risk)
+LEASE_LEAK = "lease_leak"        # an orphan ticket taken on the replica's
+#                                  lease by a client that then vanished
+STRAGGLER = "straggler"          # delta: slowdown factor f — the replica
+#                                  advances one megastep every f rounds
+
+CLUSTER_KINDS = (REPLICA_KILL, KV_PARTITION, LEASE_LEAK, STRAGGLER)
 
 
 class InjectedCrash(RuntimeError):
@@ -116,6 +147,37 @@ class FaultPlan:
         evs.sort(key=lambda e: (e.round, e.kind, e.delta, e.arg))
         return cls(seed=seed, events=tuple(evs))
 
+    @classmethod
+    def cluster(cls, seed: int, *, rounds: int, n_replicas: int,
+                n_leaks: int = 1, partition_rounds: int = 3,
+                straggle_factor: int = 3) -> "FaultPlan":
+        """The cluster chaos ladder: one replica killed MID-megastep, one
+        slow-host straggler, one KV-store partition window, plus
+        ``n_leaks`` orphan lease tickets — on three DISTINCT seeded
+        replicas, at seeded rounds in the first half of the run (so the
+        detection/migration machinery has runway to drain).  Same seed →
+        same plan; the router replays it identically."""
+        if n_replicas < 3:
+            raise ValueError("cluster plan needs ≥ 3 replicas (kill, "
+                             "straggler and partition hit distinct ones)")
+        rng = np.random.default_rng(seed)
+        reps = rng.permutation(n_replicas)[:3]
+        hi = max(2, rounds // 2)
+        evs = [
+            FaultEvent(round=int(rng.integers(1, hi)), kind=REPLICA_KILL,
+                       delta=int(rng.integers(1, 4)), arg=int(reps[0])),
+            FaultEvent(round=int(rng.integers(1, hi)), kind=STRAGGLER,
+                       delta=int(straggle_factor), arg=int(reps[1])),
+            FaultEvent(round=int(rng.integers(1, hi)), kind=KV_PARTITION,
+                       delta=int(partition_rounds), arg=int(reps[2])),
+        ]
+        for _ in range(n_leaks):
+            evs.append(FaultEvent(round=int(rng.integers(1, hi)),
+                                  kind=LEASE_LEAK,
+                                  arg=int(rng.integers(0, n_replicas))))
+        evs.sort(key=lambda e: (e.round, e.kind, e.delta, e.arg))
+        return cls(seed=seed, events=tuple(evs))
+
     def with_crash(self, rnd: int) -> "FaultPlan":
         evs = sorted(self.events + (FaultEvent(round=rnd, kind=CRASH),),
                      key=lambda e: (e.round, e.kind, e.delta, e.arg))
@@ -126,6 +188,28 @@ class FaultPlan:
 
 
 # ---------------------------------------------------------- injection ----
+
+
+def tear_checkpoint(ckpt) -> int:
+    """``TORN_SHARD``'s teeth: truncate the shard files of the NEWEST
+    complete checkpoint step in ``ckpt`` (a `CheckpointManager`), leaving
+    the directory and meta.json intact — the classic torn write a crashed
+    writer leaves behind a rename barrier.  A later ``restore`` of that
+    step raises, forcing the recovery ladder to fall back to an older
+    snapshot.  Returns the number of shards torn (0: nothing to tear)."""
+    step = ckpt.latest_step()
+    if step is None:
+        return 0
+    d = ckpt.dir / f"step_{step:09d}"
+    torn = 0
+    for shard in sorted(d.glob("shard_*.npz")):
+        size = shard.stat().st_size
+        if size < 2:
+            continue
+        with open(shard, "r+b") as f:
+            f.truncate(size // 2)
+        torn += 1
+    return torn
 
 
 def _poison_model(model):
@@ -149,6 +233,11 @@ def apply_fault(engine, ev: FaultEvent) -> bool:
     are the driver's to handle, not this function's."""
     if ev.kind == CRASH:
         raise InjectedCrash(ev)
+    if ev.kind == TORN_SHARD or ev.kind in CLUSTER_KINDS:
+        raise ValueError(
+            f"{ev.kind!r} is a driver-level fault (ResilientEngine tears "
+            "checkpoints; serving.router applies cluster kinds) — it is "
+            "not an engine-state mutation")
 
     with engine._lock:
         if ev.kind == DROP_POKE:
@@ -210,6 +299,27 @@ def apply_fault(engine, ev: FaultEvent) -> bool:
             engine._nonfinite_sticky = True  # host H_NAN until restored
             if engine.megastep_model is not None:
                 engine.megastep_model = _poison_model(engine.megastep_model)
+            return True
+
+        if ev.kind == BIT_FLIP:
+            # flip one bit of a LIVE device block-table entry: the cell
+            # now names either an out-of-range id or another slot's block
+            # (aliasing) — the deep partition sentinel (H_KV_PARTITION)
+            # trips and rung 2's audit_kv must clear the forged cell and
+            # quarantine the victim slot.  Device-path only: the forged
+            # identity physically lives in the persistent pool.
+            if (engine._kv_pool is None
+                    or getattr(engine, "_kv_state", None) is None):
+                return False
+            kv = engine._kv_state
+            tbl = np.asarray(kv.tbl)
+            live = np.argwhere(tbl >= 0)
+            if live.size == 0:
+                return False
+            s, j = (int(v) for v in live[ev.arg % len(live)])
+            bit = 1 << (abs(int(ev.delta)) % 5)  # low bits: in/near range
+            engine._kv_state = kv._replace(
+                tbl=kv.tbl.at[s, j].set(int(tbl[s, j]) ^ bit))
             return True
 
         if ev.kind == STUCK_SLOT:

@@ -62,7 +62,9 @@ from .faults import (
     InjectedCrash,
     KV_COUNTER,
     NAN_LOGIT,
+    TORN_SHARD,
     apply_fault,
+    tear_checkpoint,
 )
 
 # Request fields captured per snapshot (threading.Event bars deepcopy;
@@ -164,7 +166,12 @@ class ResilientEngine:
         self._consumed: set[int] = set()  # plan event indices repaired
         self._conserve_streak = 0
         self._health_acc = 0
-        self._snap = None  # (round, host_capture, ckpt_step)
+        self._snap = None  # (round, host_capture, ckpt_step) — newest
+        # short history of (round, host_capture, ckpt_step): restore walks
+        # it newest→oldest when the newest checkpoint is unreadable (a
+        # torn shard) — one bad write must not make rung 4 unrecoverable
+        self._snaps: list[tuple] = []
+        self._snap_keep = 3
 
     # ------------------------------------------------------------- log ----
 
@@ -277,6 +284,14 @@ class ResilientEngine:
             if ev.kind == CRASH:
                 self._consumed.add(i)  # one-shot: replay must not re-crash
                 raise InjectedCrash(ev)
+            if ev.kind == TORN_SHARD:
+                # driver-level like CRASH: corrupt the newest on-disk
+                # checkpoint (one-shot — the torn file stays torn; replay
+                # must not re-tear a freshly written snapshot)
+                self._consumed.add(i)
+                torn = tear_checkpoint(self.ckpt) if self.ckpt else 0
+                self._log(r, "inject", kind=ev.kind, applied=bool(torn))
+                continue
             applied = apply_fault(self.engine, ev)
             self._log(r, "inject", kind=ev.kind, delta=ev.delta,
                       applied=bool(applied))
@@ -367,6 +382,9 @@ class ResilientEngine:
         eng = self.engine
         self.ckpt.save_sync(r, self._device_tree())
         self._snap = (r, self._capture_host(), r)
+        self._snaps = [s for s in self._snaps if s[0] != r]
+        self._snaps.append(self._snap)
+        del self._snaps[:-self._snap_keep]
         eng.stats.snapshots += 1
         self._log(r, "snapshot", step=r)
 
@@ -420,13 +438,25 @@ class ResilientEngine:
 
     def _restore(self, at_round: int) -> int:
         """Rung 4 core: device tree ← checkpoint, host state ← capture.
-        Returns the snapshot round (replay resumes there)."""
+        Walks the snapshot history newest→oldest past unreadable (torn)
+        checkpoints.  Returns the snapshot round (replay resumes there)."""
         if self.ckpt is None or self._snap is None:
             self._log(at_round, "unrecoverable")
             return at_round
         eng = self.engine
-        rs, host, step = self._snap
-        tree, _ = self.ckpt.restore(self._device_tree(), step=step)
+        tree = None
+        for snap in reversed(self._snaps or [self._snap]):
+            rs, host, step = snap
+            try:
+                tree, _ = self.ckpt.restore(self._device_tree(), step=step)
+                break
+            except Exception as exc:  # torn shard / missing step: fall back
+                self._log(at_round, "torn_shard_fallback", step=step,
+                          error=type(exc).__name__)
+        if tree is None:
+            self._log(at_round, "unrecoverable")
+            return at_round
+        self._snap = (rs, host, step)  # the snapshot that actually loaded
         eng.qos = tree["qos"]
         if tree["kv"] != ():
             eng._kv_state = tree["kv"]

@@ -59,6 +59,16 @@ class KVStore:
         with self._lock:
             return self._data.get(key, 0)
 
+    def keys(self, prefix: str = "") -> list[str]:
+        """Range read (etcd prefix get) — the reaper's scan primitive."""
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    def delete(self, key: str) -> None:
+        with self._cond:
+            self._data.pop(key, None)
+            self._cond.notify_all()
+
     def wait_change(self, key: str, observed: int, timeout: float = 5.0) -> int:
         with self._cond:
             deadline = time.time() + timeout
@@ -116,10 +126,15 @@ class DistributedTicketLease:
     def __init__(self, kv: KVStore, name: str, capacity: int = 1,
                  long_term_threshold: int = 1, backoff_base: float = 0.005,
                  backoff_cap: float = 0.25, backoff_seed: int | None = None,
-                 heartbeat_interval: float = 0.5):
+                 heartbeat_interval: float = 0.5, clock=time.time):
         self.kv = kv
         self.name = name
+        self.capacity = int(capacity)
         self.threshold = long_term_threshold
+        # heartbeat TIME SOURCE only (stamps + ages): injectable so reaper
+        # TTL logic is testable under a virtual clock.  The blocking waits
+        # in acquire() stay on wall time — they gate real threads.
+        self._clock = clock
         self._salt = index_for(hash(name), 1 << 31)
         self.dead_skipped = 0  # grant advances that bypassed a tombstone
         self.backoff_base = float(backoff_base)
@@ -152,13 +167,15 @@ class DistributedTicketLease:
             if d.get(gk, 0) - ticket > 0:
                 return False
             d[dk] = 1
+            d.pop(f"{self.name}/hb/{ticket}", None)  # tombstoned ≠ leaked
             return True
 
         return self.kv.txn(do)
 
     def _renew_heartbeat(self, ticket: int) -> None:
         key = f"{self.name}/hb/{ticket}"
-        now_ms = int(time.time() * 1000)
+        # +1 so a stamp at virtual t=0 is distinguishable from "never"
+        now_ms = int(self._clock() * 1000) + 1
         self.kv.txn(lambda d: d.__setitem__(key, now_ms))
         self.retry_counts["heartbeats"] += 1
 
@@ -172,11 +189,69 @@ class DistributedTicketLease:
         never has).  A reaper that sees an age past its TTL can
         :meth:`cancel` the ticket to unwedge the grant sequence."""
         ms = self.kv.get(f"{self.name}/hb/{ticket}")
-        return None if ms == 0 else max(0.0, time.time() - ms / 1000.0)
+        return None if ms == 0 else max(0.0, self._clock() - (ms - 1) / 1000.0)
+
+    def outstanding(self) -> list[int]:
+        """Tickets with a live heartbeat key — the reaper's scan set
+        (release/reap delete the key; a vanished holder leaves it stale)."""
+        pre = f"{self.name}/hb/"
+        return sorted(int(k[len(pre):]) for k in self.kv.keys(pre))
 
     def wait_telemetry(self) -> dict:
         """Retry/heartbeat counters (cumulative, this process's view)."""
         return dict(self.retry_counts, queue_depth=self.queue_depth())
+
+    # ---- non-blocking admission (router path) ---------------------------
+    #
+    # A request router cannot park an OS thread per queued request; it
+    # takes the ticket up front (FCFS position now) and polls `granted`
+    # from its control loop — the queued requests ARE the lease's TWA
+    # waiting array, and `headroom()` (grant − ticket) is the routing
+    # signal.
+
+    def try_acquire(self) -> int | None:
+        """Benaphore fast path as one KV txn: take a ticket only when the
+        grant already covers it (immediate admission).  None = full."""
+        tk, gk = f"{self.name}/ticket", f"{self.name}/grant"
+
+        def do(d):
+            nxt = d.get(tk, 0)
+            if d.get(gk, 0) - nxt > 0:
+                d[tk] = nxt + 1
+                return nxt
+            return None
+
+        t = self.kv.txn(do)
+        if t is not None:
+            self.retry_counts["acquires"] += 1
+            self._renew_heartbeat(t)
+        return t
+
+    def take_ticket(self) -> int:
+        """Unconditional ticket take — queue admission without blocking.
+        The caller polls :meth:`granted` (ideally gated on its TWA bucket
+        key) and MUST keep renewing the heartbeat while queued, or a
+        reaper will tombstone the position."""
+        t = self.kv.incr(f"{self.name}/ticket")
+        self.retry_counts["acquires"] += 1
+        self._renew_heartbeat(t)
+        return t
+
+    def granted(self, ticket: int) -> bool:
+        return self.kv.get(f"{self.name}/grant") - ticket > 0
+
+    def headroom(self) -> int:
+        """grant − ticket: free units when positive, waiters when negative
+        — the per-replica routing signal (capacity − in-flight − queued)."""
+        return (self.kv.get(f"{self.name}/grant")
+                - self.kv.get(f"{self.name}/ticket"))
+
+    def bucket_state(self, ticket: int) -> tuple[str, int]:
+        """(bucket key, current sequence) for a queued ticket — lets a
+        polling router re-check `granted` only when the bucket was poked
+        (the waiting-array read-dispersal discipline, clusterized)."""
+        k = self._bucket_key(ticket)
+        return k, self.kv.get(k)
 
     def acquire(self, timeout: float = 30.0) -> int:
         ticket = self.kv.incr(f"{self.name}/ticket")
@@ -224,7 +299,13 @@ class DistributedTicketLease:
                 self.retry_counts["far"] += 1
                 observed = self.kv.wait_change(bucket, observed, timeout=wait)
 
-    def release(self) -> None:
+    def release(self, ticket: int | None = None) -> None:
+        """Advance grant by one unit (skip-aware over tombstones) and poke
+        the successor buckets.  When the releasing ``ticket`` is known its
+        heartbeat key is deleted — a released ticket must never look like
+        a leak to the reaper."""
+        if ticket is not None:
+            self.kv.delete(f"{self.name}/hb/{ticket}")
         gk = f"{self.name}/grant"
 
         def advance(d):
@@ -267,22 +348,34 @@ class HostState:
 
 @dataclass
 class Coordinator:
-    """Failure detection + barriers + straggler accounting + elastic epochs."""
+    """Failure detection + barriers + straggler accounting + elastic epochs.
+
+    ``clock`` is the failure-detection time source (heartbeat stamps, the
+    heartbeat-timeout comparison, the barrier deadline) — injectable so
+    dead/rejoining-host scenarios run deterministically under a virtual
+    clock while worker threads still block on the KV store's real
+    condition variables."""
 
     heartbeat_timeout: float = 2.0
     straggler_factor: float = 2.0
     kv: KVStore = field(default_factory=KVStore)
+    clock: object = time.time
 
     def __post_init__(self):
         self.hosts: dict[int, HostState] = {}
         self._lock = threading.Lock()
         self.epoch = 0  # membership epoch — bumped on join/leave/failure
-        self.ckpt_lease = DistributedTicketLease(self.kv, "ckpt-writers", capacity=2)
+        self.ckpt_lease = DistributedTicketLease(self.kv, "ckpt-writers",
+                                                 capacity=2, clock=self.clock)
 
     # ---- membership -------------------------------------------------------
     def join(self, host_id: int) -> int:
+        """Join or REJOIN: a host that was declared dead re-enters with a
+        fresh heartbeat and a bumped epoch (the elastic-epoch contract —
+        the driver rebuilds its mesh; stale state from the old
+        incarnation is fenced by the epoch it carries)."""
         with self._lock:
-            self.hosts[host_id] = HostState(host_id, time.time())
+            self.hosts[host_id] = HostState(host_id, self.clock())
             self.epoch += 1
             return self.epoch
 
@@ -299,7 +392,7 @@ class Coordinator:
 
     # ---- heartbeats / failure detection -----------------------------------
     def heartbeat(self, host_id: int, step: int, step_time_s: float) -> dict:
-        now = time.time()
+        now = self.clock()
         with self._lock:
             h = self.hosts.get(host_id)
             if h is None or not h.alive:
@@ -311,7 +404,7 @@ class Coordinator:
             return {"epoch": self.epoch}
 
     def detect_failures(self) -> list[int]:
-        now = time.time()
+        now = self.clock()
         dead = []
         with self._lock:
             for h in self.hosts.values():
@@ -341,9 +434,9 @@ class Coordinator:
         each poll)."""
         key = f"barrier/{gen}"
         self.kv.incr(key)
-        deadline = time.time() + timeout
+        deadline = self.clock() + timeout
         observed = -1
-        while time.time() < deadline:
+        while self.clock() < deadline:
             arrived = self.kv.get(key)
             if arrived >= len(self.alive_hosts()):
                 return True

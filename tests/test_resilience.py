@@ -458,3 +458,58 @@ def test_nan_escalates_to_rung4_restore(tmp_path):
     assert not eng._nonfinite_sticky
     assert rz.audit()["ok"]
     assert rz.samples[-1]["health"] == 0
+
+
+# --------------------------------------------- PR 8: corruption kinds ----
+
+
+def test_bit_flip_trips_audit_and_drains():
+    """BIT_FLIP corrupts one live block-table entry on the device pool;
+    the deep sentinels see the aliasing/conservation break and the
+    ladder's rung-2 audit rebuilds block truth — the run still drains
+    and the exit audit is clean."""
+    from repro.resilience import BIT_FLIP
+
+    clk = [0.0]
+    eng = _mk_eng(clk, watchdog=4)
+    reqs = tcp._workload(5, 8, 0.0)
+    plan = FaultPlan(seed=0, events=(
+        FaultEvent(round=6, kind=BIT_FLIP, arg=2, delta=1),))
+    rz = ResilientEngine(eng, plan=plan, react_every=2, seed=0)
+    eng.submit_batch(reqs)
+    _drain(rz, reqs, mega=True)
+    assert all(r.done_event.is_set() for r in reqs)
+    rec = rz.telemetry()["recovery"]
+    assert rec["kv_audits"] >= 1, rec
+    assert any(e["action"] == "audit_kv" for e in rz.events)
+    assert rz.audit()["ok"], rz.audit()["violations"]
+
+
+def test_torn_shard_restore_falls_back_to_older_snapshot(tmp_path):
+    """TORN_SHARD truncates the newest checkpoint's shard files on disk
+    (a half-written write at crash time).  The next rung-4 restore finds
+    the torn step unloadable, logs the fallback, walks to the previous
+    snapshot in history, and replays forward — the run converges anyway."""
+    from repro.resilience import TORN_SHARD
+
+    clk = [0.0]
+    eng = _mk_eng(clk, watchdog=4)
+    reqs = tcp._workload(19, 8, 0.0)
+    plan = FaultPlan(seed=0, events=(
+        FaultEvent(round=9, kind=TORN_SHARD),
+        FaultEvent(round=10, kind=CRASH),
+    ))
+    ck = CheckpointManager(str(tmp_path), keep=8)
+    rz = ResilientEngine(eng, plan=plan, react_every=2, seed=0, ckpt=ck,
+                         snapshot_every=4)
+    eng.submit_batch(reqs)
+    # single megasteps from round 0 so the in-scan restore never rewinds
+    # past the launch base (the torn fallback lands on an OLDER snapshot)
+    _drain(rz, reqs, mega=True, K=24)
+    assert all(r.done_event.is_set() for r in reqs)
+    falls = [e for e in rz.events if e["action"] == "torn_shard_fallback"]
+    assert falls and falls[0]["step"] == 8
+    assert any(e["action"] == "restore" and e["at_round"] < 8
+               for e in rz.events if "at_round" in e) or \
+        eng.stats.restores >= 1
+    assert rz.audit()["ok"], rz.audit()["violations"]
