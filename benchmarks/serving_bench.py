@@ -440,6 +440,137 @@ def run_longprompt(metrics: dict | None = None) -> list[str]:
     return lines
 
 
+def run_prefix_cache(metrics: dict | None = None) -> list[str]:
+    """Repeated-prefix workload (PR 9): every request opens with the SAME
+    224-token system prompt; the second half repeats earlier prompts
+    verbatim (retry/regenerate traffic).  Sharing OFF prefills all 232
+    tokens per request; sharing ON attaches the cached prefix by incref
+    (zero prefill flops, zero new HBM for the covered blocks) and
+    prefills only the 9-token divergent tail — full-prompt repeats skip
+    prefill entirely (`prefix_hits`).  Decode lengths are staggered so
+    lifetimes overlap (weak cache entries live exactly as long as their
+    blocks) — the steady-state shape of real shared-prefix traffic.
+    Same pool both ways (equal HBM).  The ISSUE acceptance: ≥2×
+    tokens/s, lower TTFT, and a lower live-block footprint (shared
+    blocks counted once) at equal HBM."""
+    from repro.obs import EngineObs
+    from repro.serving.engine_state import (
+        make_chunked_prefill_token_fn,
+        make_paged_pool_model,
+    )
+
+    NB, BS, MB = 256, 8, 32
+    S, K, CHUNK, BUDGET = 8, 16, 24, 48
+    d, vocab, PRE, TAIL = 8, 50, 224, 9
+    DT = 0.25
+    n_req = 16 if _quick() else 48
+    # seed chosen so the shared chain's 28 direct-mapped homes are
+    # pairwise distinct (a same-sweep collision would permanently cut
+    # the chain at the colliding depth — misses, not corruption, but
+    # this bench measures the sharing win, not the collision rate)
+    sysp = list(np.random.default_rng(4).integers(1, vocab, PRE))
+    rng = np.random.default_rng(3)
+    mxs = [int(m) for m in rng.integers(3, 8, n_req)]  # staggered decodes
+    prompts = []
+    for i in range(n_req):
+        if i >= S and i % 2 == 1:
+            # verbatim repeat of a recently-admitted prompt: its holder
+            # is still decoding, so the full-prompt entry is live
+            prompts.append(list(prompts[i - 2]))
+        else:
+            prompts.append(sysp + list(rng.integers(1, vocab, TAIL)))
+    tok_fn = make_chunked_prefill_token_fn(CHUNK)
+
+    def drain(prefix: int):
+        clk = [0.0]
+        obs = EngineObs(ttft_target=24 * DT)
+        eng = ContinuousBatchingEngine(
+            lambda a: None, lambda r: None, S, tenants={"a": 1.0},
+            clock=lambda: clk[0], kv_pool=(NB, BS, MB), prompt_cap=256,
+            chunked_prefill=(CHUNK, BUDGET), prefix_cache=prefix, obs=obs)
+        eng.megastep_model = make_paged_pool_model(
+            jax.random.PRNGKey(0), vocab=vocab, d=d, num_blocks=NB,
+            block_size=BS)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=mxs[i],
+                        tenant_id="a") for i, p in enumerate(prompts)]
+        eng.submit_batch(reqs)
+        utils, pf_tok = [], 0
+        t0 = time.perf_counter()
+        while eng.stats.finished < n_req:
+            base = eng._round_no
+            nows = np.asarray([(base + k) * DT for k in range(K)],
+                              np.float32)
+            clk[0] = 0.0
+            eng.megastep(K, token_fn=tok_fn, nows=nows)
+            clk[0] = float(nows[-1]) + DT
+            utils.append(eng.telemetry()["pool_utilization"])
+            pf_tok += sum(s["prefill_tokens"] for s in eng._last_samples)
+        dt = time.perf_counter() - t0
+        live = [u for u in utils if u > 0] or [0.0]
+        s = obs.summary()["tenants"]["a"]
+        return eng, reqs, dt, sum(live) / len(live), s["ttft"]["p50"], pf_tok
+
+    drain(0)  # warm the executables out of the timing
+    runs_b = [drain(0) for _ in range(5)]
+    drain(1024)
+    runs_s = [drain(1024) for _ in range(5)]
+    eng_b, reqs_b, dt_b, util_b, ttft_b, pf_b = min(runs_b,
+                                                    key=lambda t: t[2])
+    eng_s, reqs_s, dt_s, util_s, ttft_s, pf_s = min(runs_s,
+                                                    key=lambda t: t[2])
+    tokens = int(sum(len(r.out_tokens) for r in reqs_b))
+    assert tokens == sum(len(r.out_tokens) for r in reqs_s)
+    tps_b, tps_s = tokens / dt_b, tokens / dt_s
+    speedup = tps_s / tps_b
+    lines = ["", "== Refcounted prefix cache: shared system prompt "
+                 "(equal HBM) ==",
+             f"   pool {NB}×{BS}, {S} slots, K={K}; {n_req} requests = "
+             f"{PRE}-tok shared prefix + {TAIL}-tok tail (+3–7 decode), "
+             f"verbatim repeats after the first wave; chunk={CHUNK}, "
+             f"budget={BUDGET}/round"]
+    lines.append(f"{'path':>10} {'tokens/s':>9} {'rounds':>7} "
+                 f"{'prefill tok':>12} {'ttft p50':>9} {'pool util':>10} "
+                 f"{'speedup':>8}")
+    lines.append(f"{'no share':>10} {tps_b:>9.0f} {eng_b.stats.steps:>7} "
+                 f"{pf_b:>12} {ttft_b:>9.2f} {util_b:>9.1%} {'1.0×':>8}")
+    lines.append(f"{'sharing':>10} {tps_s:>9.0f} {eng_s.stats.steps:>7} "
+                 f"{pf_s:>12} {ttft_s:>9.2f} {util_s:>9.1%} "
+                 f"{speedup:>7.1f}×")
+    lines.append(f"→ {eng_s.stats.prefix_hits} full-prompt hits prefilled "
+                 f"ZERO tokens; chained attaches cut prefill flops "
+                 f"{pf_b / max(pf_s, 1):.1f}× and rounds "
+                 f"{eng_b.stats.steps / eng_s.stats.steps:.1f}×; "
+                 f"{eng_s.stats.cow_copies} copy-on-write takes kept "
+                 f"shared blocks immutable; shared blocks count once, so "
+                 f"the same pool sustains more concurrent requests "
+                 f"(util {util_s:.1%} vs {util_b:.1%})")
+    floor = 1.4 if _quick() else 2.0
+    assert speedup >= floor, \
+        f"prefix sharing only {speedup:.2f}× over no-sharing (<{floor}×)"
+    assert eng_s.stats.prefix_hits > 0, "no full-prompt cache hit engaged"
+    assert pf_s < pf_b / 2, (pf_s, pf_b)
+    assert eng_b.stats.prefix_hits == 0
+    if metrics is not None:
+        metrics["prefix_cache"] = {
+            "no_share": {"tok_s": round(tps_b, 1),
+                         "rounds": eng_b.stats.steps,
+                         "prefill_tokens": int(pf_b),
+                         "ttft_p50": round(float(ttft_b), 4),
+                         "pool_util": round(util_b, 4)},
+            "sharing": {"tok_s": round(tps_s, 1),
+                        "rounds": eng_s.stats.steps,
+                        "prefill_tokens": int(pf_s),
+                        "ttft_p50": round(float(ttft_s), 4),
+                        "pool_util": round(util_s, 4),
+                        "prefix_hits": int(eng_s.stats.prefix_hits),
+                        "cow_copies": int(eng_s.stats.cow_copies)},
+            "speedup": round(speedup, 2),
+            "prefill_flop_ratio": round(pf_b / max(pf_s, 1), 2),
+            "hbm_tokens": NB * BS,
+        }
+    return lines
+
+
 def run_slo(metrics: dict | None = None) -> list[str]:
     """Per-tenant SLO report off the PR-6 observability layer: a
     deterministic virtual-clock workload decodes through megastep with an
@@ -688,6 +819,7 @@ def run(metrics: dict | None = None) -> str:
     lines.extend(run_megastep(metrics))
     lines.extend(run_paged_pool(metrics))
     lines.extend(run_longprompt(metrics))
+    lines.extend(run_prefix_cache(metrics))
     lines.extend(run_slo(metrics))
     lines.extend(run_resilience(metrics))
     lines.extend(run_cluster(metrics))

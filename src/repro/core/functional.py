@@ -140,14 +140,29 @@ class BlockPool(NamedTuple):
     stays exact across the 2³² counter wrap (``(p mod 2³²) mod NB ==
     p mod NB`` iff NB | 2³² — same reasoning as the bucket table mask).
 
-    Conservation invariant (property-tested): the multiset
-    ``{free_q[ticket..grant)} ∪ {live block-table entries}`` is exactly
-    ``{0..NB-1}`` at every round — no block is ever lost or aliased into
-    two live tables.
+    Blocks are **refcounted** (prefix sharing, PR 9): one block may be
+    referenced by several live tables at once — a shared prompt prefix is
+    stored exactly once, each sharer holding one reference.  Allocation
+    grants a block with refcount 1; `pool_incref` attaches an additional
+    sharer; `pool_release` is decref-then-`post` — a released reference
+    only re-enqueues the block id (and pokes the waiting array) when its
+    refcount hits zero, i.e. the semaphore's `post` becomes CONDITIONAL
+    on the last reference dying.  ``gen`` is a per-block generation
+    stamp, bumped each time a block is freed, so weak references (the
+    prefix cache) can detect reuse without holding a refcount.
+
+    Conservation invariant (property-tested): the free-queue region
+    ``{free_q[ticket..grant)}`` and the referenced set ``{b : refcnt[b] >
+    0}`` partition ``{0..NB-1}``, and per block the number of live
+    block-table references equals ``refcnt`` (``Σ table references =
+    Σ refcnt``) — no block is ever lost, and aliasing is exactly the
+    refcount, never accidental.
     """
 
     sema: SemaState    # ticket/grant u32 — free blocks = grant − ticket
     free_q: jax.Array  # (NB,) i32 — circular queue of free block ids
+    refcnt: jax.Array  # (NB,) i32 — live references per block (0 = free)
+    gen: jax.Array     # (NB,) u32 — bumped on free (weak-ref validity)
 
 
 def make_block_pool(num_blocks: int, table_size: int = 64,
@@ -164,7 +179,9 @@ def make_block_pool(num_blocks: int, table_size: int = 64,
     pos = ((start + jnp.arange(num_blocks, dtype=jnp.uint32))
            & jnp.uint32(num_blocks - 1)).astype(jnp.int32)
     return BlockPool(sema=sema,
-                     free_q=jnp.zeros((num_blocks,), jnp.int32).at[pos].set(ids))
+                     free_q=jnp.zeros((num_blocks,), jnp.int32).at[pos].set(ids),
+                     refcnt=jnp.zeros((num_blocks,), jnp.int32),
+                     gen=jnp.zeros((num_blocks,), jnp.uint32))
 
 
 def pool_free_count(pool: BlockPool) -> jax.Array:
@@ -189,24 +206,54 @@ def pool_alloc(pool: BlockPool, counts: jax.Array, max_per: int):
     ids = jnp.where(take, pool.free_q[pos.astype(jnp.int32)], -1)
     total = jnp.sum(counts).astype(jnp.uint32)
     sema = pool.sema._replace(ticket=pool.sema.ticket + total)
-    return pool._replace(sema=sema), ids
+    refcnt = pool.refcnt.at[jnp.where(take, ids, NB)].add(
+        take.astype(jnp.int32), mode="drop")   # fresh grant: refcount 0 → 1
+    return pool._replace(sema=sema, refcnt=refcnt), ids
 
 
 def pool_release(pool: BlockPool, ids: jax.Array, mask: jax.Array) -> BlockPool:
-    """Batched post: every non-negative id in the rows selected by ``mask``
-    re-enters the free queue at the grant cursor (row-major order), then
-    the semaphore `post`s the total — advancing grant AND poking the
-    TWAHash buckets of the newly enabled ticket range, so block waiters
-    are staged for re-examination exactly like slot waiters."""
+    """Batched decref-then-`post`: every non-negative id in the rows
+    selected by ``mask`` drops one reference; a block re-enters the free
+    queue at the grant cursor — and the semaphore `post`s, advancing
+    grant AND poking the TWAHash buckets of the newly enabled ticket
+    range — only when its refcount hits zero (the last sharer leaving).
+    With no sharing (every refcount 1) this degenerates to the PR-4
+    unconditional post.  Freed ids enqueue in ascending-id order (any
+    fixed order preserves the partition invariant; ascending keeps the
+    scatter deterministic when one batch frees several blocks).  Each
+    freed block's ``gen`` stamp bumps, invalidating weak references.
+    Refcounts are NOT clamped at zero: releasing a reference that was
+    never held drives ``refcnt`` negative, which the partition sentinel
+    (`serving.sentinels.kv_partition_violated`) reports as corruption —
+    the double-release fault stays detectable."""
     NB = pool.free_q.shape[0]
-    valid = (mask[:, None] & (ids >= 0)).reshape(-1)
+    valid = mask[:, None] & (ids >= 0) if ids.ndim == 2 else mask & (ids >= 0)
     flat = ids.reshape(-1)
-    vu = valid.astype(jnp.uint32)
-    rank = jnp.cumsum(vu) - vu
+    tgt = jnp.where(valid.reshape(-1), flat, NB)  # out-of-range → dropped
+    cnt = jnp.zeros((NB,), jnp.int32).at[tgt].add(1, mode="drop")
+    refcnt = pool.refcnt - cnt
+    freed = (cnt > 0) & (refcnt == 0)            # decref hit exactly zero
+    fu = freed.astype(jnp.uint32)
+    rank = jnp.cumsum(fu) - fu
     pos = ((pool.sema.grant + rank) & jnp.uint32(NB - 1)).astype(jnp.int32)
-    tgt = jnp.where(valid, pos, NB)              # out-of-range → dropped
-    free_q = pool.free_q.at[tgt].set(flat, mode="drop")
-    return BlockPool(sema=post_batch(pool.sema, jnp.sum(vu)), free_q=free_q)
+    qtgt = jnp.where(freed, pos, NB)
+    free_q = pool.free_q.at[qtgt].set(jnp.arange(NB, dtype=jnp.int32),
+                                      mode="drop")
+    return BlockPool(sema=post_batch(pool.sema, jnp.sum(fu)), free_q=free_q,
+                     refcnt=refcnt, gen=pool.gen + fu)
+
+
+def pool_incref(pool: BlockPool, ids: jax.Array, mask: jax.Array) -> BlockPool:
+    """Attach additional references (prefix sharing): every non-negative id
+    selected by ``mask`` gains one reference.  No counter moves, no queue
+    traffic, no poke — sharing an already-live block is free at the
+    semaphore level; only the LAST `pool_release` of a block posts."""
+    NB = pool.free_q.shape[0]
+    valid = mask & (ids >= 0)
+    tgt = jnp.where(valid, ids, NB).reshape(-1)
+    refcnt = pool.refcnt.at[tgt].add(
+        valid.reshape(-1).astype(jnp.int32), mode="drop")
+    return pool._replace(refcnt=refcnt)
 
 
 def park_state(sema: SemaState, deficit: jax.Array):

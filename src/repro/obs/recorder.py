@@ -17,7 +17,8 @@ from .slo import TenantSLO
 from .smooth import TraceSmoother
 
 # per-round gauges worth a smoothed companion trace (noisy sawtooths)
-_SMOOTH_FIELDS = ("tokens", "active", "kv_free", "prefill_tokens")
+_SMOOTH_FIELDS = ("tokens", "active", "kv_free", "prefill_tokens",
+                  "blocks_shared")
 
 
 class EngineObs:
@@ -46,6 +47,9 @@ class EngineObs:
         self.health_mask = 0        # OR of every round's sentinel bitmask
         self.sick_rounds = 0        # rounds with any sentinel bit set
         self.tenant_retries: dict[str, int] = {}  # recovery requeues seen
+        self.prefix_hits = 0        # zero-prefill cached-prefix admissions
+        self.cow_copies = 0         # copy-on-write takes of shared tails
+        self.blocks_shared_peak = 0  # max blocks referenced by >1 table
         self._smoother = (TraceSmoother(_SMOOTH_FIELDS, smooth_window)
                           if smooth_window > 1 else None)
 
@@ -57,6 +61,10 @@ class EngineObs:
         if h:
             self.health_mask |= h
             self.sick_rounds += 1
+        self.prefix_hits += int(sample.get("prefix_hits", 0))
+        self.cow_copies += int(sample.get("cow_copies", 0))
+        self.blocks_shared_peak = max(self.blocks_shared_peak,
+                                      int(sample.get("blocks_shared", 0)))
         record = sample
         if self._smoother is not None:
             record = dict(sample)
@@ -91,6 +99,9 @@ class EngineObs:
             "health": {"mask": self.health_mask,
                        "sick_rounds": self.sick_rounds},
             "retries": dict(sorted(self.tenant_retries.items())),
+            "prefix": {"hits": self.prefix_hits,
+                       "cow_copies": self.cow_copies,
+                       "blocks_shared_peak": self.blocks_shared_peak},
             "tenants": {t: s.summary() for t, s in sorted(self.tenants.items())},
         }
 
@@ -123,6 +134,10 @@ class EngineObs:
                 names = hex(self.health_mask)
             lines.append(f"health: 0x{self.health_mask:x} ({names}) over "
                          f"{self.sick_rounds}/{self.rounds} rounds")
+        if self.prefix_hits or self.cow_copies or self.blocks_shared_peak:
+            lines.append(f"prefix: hits={self.prefix_hits} "
+                         f"cow={self.cow_copies} "
+                         f"shared_peak={self.blocks_shared_peak}")
         if recovery:
             lines.append("recovery: " + " ".join(
                 f"{k}={v}" for k, v in sorted(recovery.items()) if v))

@@ -100,7 +100,12 @@ def exit_audit(engine) -> dict:
             violations.append(f"negative tenant credit {credit.tolist()}")
     if engine._kv_pool is not None:
         NB = engine._kv_blocks
-        if engine._chunk:
+        sharing = getattr(engine, "_kv_share", False)
+        if sharing:
+            # refcounted conservation: shared blocks are held ONCE — the
+            # refcount support is the allocated set (replica np mirror)
+            held = int((engine._kv_refcnt_h > 0).sum())
+        elif engine._chunk:
             held = sum(r.kv_blocks for r in engine.active.values())
         else:
             held = sum(engine._kv_demand(r)
@@ -111,18 +116,45 @@ def exit_audit(engine) -> dict:
                 f"{held} != {NB}")
         kv = getattr(engine, "_kv_state", None)
         if kv is not None:
-            tbl = np.asarray(kv.tbl)
+            pool, tbl = kv.pool, np.asarray(kv.tbl)
+        elif sharing:
+            # host-loop sharing: the replica pool/table IS the ground
+            # truth — audit it exactly like a persisted device pool
+            pool, tbl = engine._kv_hpool, np.asarray(engine._kv_htbl)
+        else:
+            pool = tbl = None
+        if pool is not None:
             live = tbl[tbl >= 0]
-            n_free = int(np.int32(np.uint32(kv.pool.sema.grant)
-                                  - np.uint32(kv.pool.sema.ticket)))
+            n_free = int(np.int32(np.uint32(pool.sema.grant)
+                                  - np.uint32(pool.sema.ticket)))
             if n_free < 0 or n_free > NB:
                 violations.append(f"kv sema free count {n_free} out of "
                                   f"[0, {NB}]")
+            elif sharing:
+                # generalized partition: {free ids} ∪ {refcnt > 0} must
+                # tile {0..NB−1}, and per-block table references must
+                # equal the refcount (Σ table refs = Σ refcnt)
+                refcnt = np.asarray(pool.refcnt)
+                tick = int(np.uint32(pool.sema.ticket))
+                pos = (tick + np.arange(n_free)) & (NB - 1)
+                fid = np.asarray(pool.free_q)[pos]
+                ok_f = (fid >= 0) & (fid < NB)
+                cnt = np.bincount(fid[ok_f], minlength=NB)
+                refs = np.bincount(live[live < NB], minlength=NB)
+                if (~ok_f).any() or (live >= NB).any() or \
+                        (cnt + (refcnt > 0) != 1).any():
+                    violations.append(
+                        "kv partition: free queue ∪ {refcnt > 0} does "
+                        f"not tile 0..{NB - 1}")
+                if (refs != refcnt).any():
+                    violations.append(
+                        "kv refcnt: table references do not match the "
+                        "pool refcounts")
             else:
-                tick = int(np.uint32(kv.pool.sema.ticket))
+                tick = int(np.uint32(pool.sema.ticket))
                 pos = (tick + np.arange(n_free)) & (NB - 1)
                 ids = np.concatenate(
-                    [np.asarray(kv.pool.free_q)[pos], live])
+                    [np.asarray(pool.free_q)[pos], live])
                 cnt = np.bincount(ids[(ids >= 0) & (ids < NB)],
                                   minlength=NB)
                 if (ids < 0).any() or (ids >= NB).any() or (cnt != 1).any():

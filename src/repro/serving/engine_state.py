@@ -177,6 +177,7 @@ from ..core.functional import (
     make_sema,
     pool_alloc,
     pool_free_count,
+    pool_incref,
     pool_release,
     pool_try_alloc,
     post_batch,
@@ -189,7 +190,14 @@ from .prefill import (
     chunk_plan,
     first_chunk_demand,
     pending_prompt_tokens,
+    shared_first_chunk_demand,
     total_block_demand,
+)
+from .prefix import (
+    PrefixCache,
+    cache_lookup,
+    cache_register,
+    make_prefix_cache,
 )
 
 # admission-order sort key packs (clamped ticket distance, tenant index)
@@ -219,6 +227,10 @@ class Backlog(NamedTuple):
     admit_round: jax.Array   # (B,) i32 — global round of admission (-1)
     expire_round: jax.Array  # (B,) i32 — global round of expiry (-1)
     slot: jax.Array          # (B,) i32 — slot assigned at admission (-1)
+    # -- prompt-prefix sharing (serving.prefix; None when disabled) --
+    ph: Optional[jax.Array] = None  # (B, 2, W+1) u32 — prompt hash table
+    #                                 (prefix.prompt_hashes, computed on the
+    #                                 host at submit — never re-hashed here)
 
 
 class Slots(NamedTuple):
@@ -245,15 +257,50 @@ class Slots(NamedTuple):
     last_adv: jax.Array  # (S,) i32 — last round this slot made progress
     #                      (token emitted / chunk landed / just assigned) —
     #                      the stuck-slot watchdog's clock (sentinels.py)
+    # -- prompt-prefix sharing (serving.prefix; None when disabled) --
+    ph: Optional[jax.Array] = None       # (S, 2, W+1) u32 — prompt hashes
+    #                                      (copied from the backlog row at
+    #                                      assignment; cache_register reads)
+    cow_src: Optional[jax.Array] = None  # (S,) i32 — copy-on-write source
+    #                                      block id staged THIS round (-1 =
+    #                                      none): token_fn copies the shared
+    #                                      block's contents into the fresh
+    #                                      private block before decode writes
 
 
 class KVPool(NamedTuple):
     """Block-paged KV state: the TWA block semaphore over the circular
     free queue (`core.functional.BlockPool`) plus the per-slot block
-    tables the paged-decode kernel streams through."""
+    tables the paged-decode kernel streams through.
+
+    Refcounted sharing (PR 9) — the semaphore with a conditional `post`
+    ----------------------------------------------------------------------
+    With ``cache`` attached, a block may be referenced by SEVERAL slot
+    tables at once (a shared prompt prefix).  The paper's semaphore keeps
+    owning the block *lifecycle* — the free-queue cursors still satisfy
+    ``grant − ticket = free`` and every free block id still lives in
+    ``free_q[ticket..grant)`` — but `post` becomes **conditional on the
+    refcount**: attaching a sharer (`core.functional.pool_incref`) moves
+    no counter and pokes no bucket (sharing a live block is free at the
+    semaphore level), and a release (`pool_release`) decrefs first, only
+    re-enqueueing the id and poking the waiting array when the LAST
+    sharer leaves.  The conservation invariant generalizes to
+
+        {free_q[ticket..grant)} ∪ {blocks with refcnt > 0} = {0..NB−1}
+        Σ table references = Σ refcnt
+
+    (the PR-4 one-owner partition is the refcnt ∈ {0,1} special case).
+    The ``cache`` itself holds NO references — it is a weak gen-stamped
+    index (`serving.prefix.PrefixCache`), so it never delays a free and
+    never resurrects a reused block."""
 
     pool: BlockPool      # free queue + block semaphore (grant−ticket = free)
     tbl: jax.Array       # (S, MB) i32 — per-slot block ids, -1 = unallocated
+    cache: Optional[PrefixCache] = None  # weak prefix index (None = no
+    #                                      sharing; presence enables the
+    #                                      sharing paths — a STATIC pytree
+    #                                      property, so both modes stay
+    #                                      single-trace)
 
 
 class TelemetrySample(NamedTuple):
@@ -280,6 +327,11 @@ class TelemetrySample(NamedTuple):
     slot_free: jax.Array        # i32 — free-slot sema grant − ticket
     kv_free: jax.Array          # i32 — block sema grant − ticket (0 dense)
     kv_pokes: jax.Array         # u32 — Σ block-sema bucket_seq (mod 2³²)
+    prefix_hits: jax.Array      # i32 — fully-covered admits this round
+    #                             (prefix cache served the WHOLE prompt:
+    #                             zero prefill flops, zero new HBM)
+    blocks_shared: jax.Array    # i32 — blocks with refcnt ≥ 2 (end of round)
+    cow_copies: jax.Array       # i32 — copy-on-write takes this round
     health: jax.Array           # u32 — invariant-sentinel bitmask
     #                             (serving/sentinels.py; 0 = healthy.  Low
     #                             16 bits are host-mirrorable checks —
@@ -316,6 +368,7 @@ def make_telemetry_ring(capacity: int, n_tenants: int,
             prefill_chunks=z, prefill_pending=z, gate_stalls=z, parked=z,
             backlog=z, active=z, slot_free=z, kv_free=z,
             kv_pokes=jnp.zeros((R,), jnp.uint32),
+            prefix_hits=z, blocks_shared=z, cow_copies=z,
             health=jnp.zeros((R,), jnp.uint32),
             credit=jnp.zeros((R, T), jnp.int32),
             poke_dead=jnp.zeros((R, T), jnp.uint32),
@@ -362,6 +415,9 @@ def ring_samples(ring, t0: float = 0.0) -> list:
             "slot_free": int(buf.slot_free[k]),
             "kv_free": int(buf.kv_free[k]),
             "kv_pokes": int(buf.kv_pokes[k]),
+            "prefix_hits": int(buf.prefix_hits[k]),
+            "blocks_shared": int(buf.blocks_shared[k]),
+            "cow_copies": int(buf.cow_copies[k]),
             "health": int(buf.health[k]),
             "credit": [int(c) for c in np.asarray(buf.credit[k])],
             "poke_dead": [int(d) for d in np.asarray(buf.poke_dead[k])],
@@ -409,23 +465,34 @@ AdmitFn = Optional[Callable]
 def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
                       prompt_cap: int, *, free_units=0,
                       slot_table: int = SLOT_TABLE, kv_blocks: int = 0,
-                      kv_slot_blocks: int = 0,
-                      ring_cap: int = 0) -> EngineState:
+                      kv_slot_blocks: int = 0, ring_cap: int = 0,
+                      prefix_entries: int = 0,
+                      hash_width: int = 0) -> EngineState:
     """Fresh device state (empty backlog, idle slots).  The scheduler
     refreshes backlog/slot rows from its host queues at each launch; the
     QoS state is the one source of truth shared with the host path.
     ``kv_blocks`` > 0 attaches a block-paged KV pool of that many blocks
     (power of two) with ``kv_slot_blocks``-entry per-slot block tables.
     ``ring_cap`` > 0 (power of two ≥ the scan length) attaches the
-    in-scan :class:`TelemetryRing` (module docstring)."""
+    in-scan :class:`TelemetryRing` (module docstring).
+    ``prefix_entries`` > 0 (power of two; requires the pool) attaches the
+    weak prefix cache and the prompt-hash / copy-on-write slot state that
+    enable refcounted block sharing; ``hash_width`` is the per-prompt
+    hash-table width W (``prompt_cap // block_size`` — one entry per full
+    block boundary plus the full-prompt column)."""
     assert backlog_cap >= n_slots, "backlog capacity must cover the slots"
+    assert prefix_entries == 0 or kv_blocks > 0, \
+        "prefix sharing needs the block-paged pool"
     S, B, P = n_slots, backlog_cap, prompt_cap
+    W = hash_width
     zb = jnp.zeros((B,), jnp.int32)
     kv = None
     if kv_blocks:
         assert kv_slot_blocks > 0, "paged pool needs a per-slot table size"
         kv = KVPool(pool=make_block_pool(kv_blocks, table_size=slot_table),
-                    tbl=jnp.full((S, kv_slot_blocks), -1, jnp.int32))
+                    tbl=jnp.full((S, kv_slot_blocks), -1, jnp.int32),
+                    cache=(make_prefix_cache(prefix_entries)
+                           if prefix_entries else None))
     ring = None
     if ring_cap:
         ring = make_telemetry_ring(ring_cap, qos.ticket.shape[0],
@@ -447,7 +514,9 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
             prompt=jnp.zeros((B, P), jnp.int32), prompt_len=zb,
             admit_round=jnp.full((B,), -1, jnp.int32),
             expire_round=jnp.full((B,), -1, jnp.int32),
-            slot=jnp.full((B,), -1, jnp.int32)),
+            slot=jnp.full((B,), -1, jnp.int32),
+            ph=(jnp.zeros((B, 2, W + 1), jnp.uint32)
+                if prefix_entries else None)),
         slots=Slots(
             busy=jnp.zeros((S,), bool),
             row=jnp.full((S,), -1, jnp.int32),
@@ -466,7 +535,11 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
             park_bucket=jnp.zeros((S,), jnp.int32),
             park_seq=jnp.zeros((S,), jnp.uint32),
             chunk=jnp.zeros((S,), jnp.int32),
-            last_adv=jnp.zeros((S,), jnp.int32)),
+            last_adv=jnp.zeros((S,), jnp.int32),
+            ph=(jnp.zeros((S, 2, W + 1), jnp.uint32)
+                if prefix_entries else None),
+            cow_src=(jnp.full((S,), -1, jnp.int32)
+                     if prefix_entries else None)),
     )
 
 
@@ -501,6 +574,33 @@ def _slot_rem(sl: Slots, held: jax.Array, block_size: int) -> jax.Array:
     return jnp.where(sl.busy, total - held, 0)
 
 
+def _share_flags(tbl: jax.Array, refcnt: jax.Array, busy: jax.Array,
+                 pos: jax.Array, plen: jax.Array, held: jax.Array,
+                 block_size: int):
+    """The two per-slot sharing inputs of `serving.prefill.chunk_plan`,
+    in ONE canonical formulation (host `_chunk_step` and the scanned
+    round both call this — the formulas must never fork):
+
+      ``cow``: the slot is decode-ready and its NEXT write would land in
+      its current tail block while that block is still shared
+      (``refcnt > 1``) — it must take a private copy first;
+      ``held_free``: how many of the slot's held blocks it alone
+      references (``refcnt == 1``) — the only ones whose release will
+      actually free pool capacity (the Banker cover).
+
+    Returns ``(cow (S,) bool, held_free (S,) i32)``.
+    """
+    S, MB = tbl.shape
+    NB = refcnt.shape[0]
+    rows_i = jnp.arange(S, dtype=jnp.int32)
+    cur = tbl[rows_i, jnp.clip(held - 1, 0, MB - 1)]
+    cow = (busy & (pos >= plen) & (pos < held * block_size) & (cur >= 0)
+           & (refcnt[jnp.clip(cur, 0, NB - 1)] > 1))
+    priv = (tbl >= 0) & (refcnt[jnp.clip(tbl, 0, NB - 1)] == 1)
+    held_free = jnp.sum(priv.astype(jnp.int32), axis=1)
+    return cow, held_free
+
+
 def _chunk_phase(state: EngineState, chunk: int, budget: int,
                  block_size: int):
     """The chunked-prefill slice of one engine round: plan this round's
@@ -508,9 +608,15 @@ def _chunk_phase(state: EngineState, chunk: int, budget: int,
     order), take the granted blocks from the TWA block semaphore
     (`core.functional.pool_try_alloc` — parked slots register on the
     waiting array instead), scatter the fresh ids into the slot tables,
-    and stage the per-slot chunk lengths for ``token_fn``.  Returns
-    ``(state', emit)`` — the decode mask of this round."""
+    and stage the per-slot chunk lengths for ``token_fn``.  With the
+    prefix cache attached the plan additionally carries copy-on-write
+    takes (`_share_flags`): a granted COW block REPLACES the slot's
+    shared tail block in the table, the replaced id is decref'd in ONE
+    batched `pool_release`, and ``slots.cow_src`` stages the source id
+    for token_fn's in-pass block copy.  Returns ``(state', emit,
+    n_cow)`` — the decode mask and the round's copy-on-write count."""
     sl, kv = state.slots, state.kv
+    sharing = kv.cache is not None
     S, MB = kv.tbl.shape
     held = jnp.sum((kv.tbl >= 0).astype(jnp.int32), axis=1)
     # TWA wake gate: parked slots re-attempt only when a release poked
@@ -518,11 +624,17 @@ def _chunk_phase(state: EngineState, chunk: int, budget: int,
     # re-checks; a missed state change is impossible — free−guard grows
     # only via releases, and every release pokes the enabled range).
     woken = kv.pool.sema.bucket_seq[sl.park_bucket] != sl.park_seq
-    order = banker_order(_slot_rem(sl, held, block_size), sl.prio_r,
-                         sl.prio_k, sl.busy)
+    if sharing:
+        cow, held_free = _share_flags(kv.tbl, kv.pool.refcnt, sl.busy,
+                                      sl.pos, sl.plen, held, block_size)
+    else:  # chunk_plan reduces bit-identically to the PR-5 plan
+        cow, held_free = jnp.zeros((S,), bool), held
+    rem = _slot_rem(sl, held, block_size) + jnp.where(cow, 1, 0)
+    order = banker_order(rem, sl.prio_r, sl.prio_k, sl.busy)
     plan = chunk_plan(order, sl.busy, sl.parked, woken, sl.pos, sl.plen,
-                      sl.max_new, held, pool_free_count(kv.pool),
-                      chunk=chunk, budget=budget, block_size=block_size)
+                      sl.max_new, held, pool_free_count(kv.pool), cow,
+                      held_free, chunk=chunk, budget=budget,
+                      block_size=block_size)
     newly = plan.parked & (plan.deficit > 0)
     max_take = cdiv(chunk, block_size) + 1  # a chunk can straddle a block
     pool, ids, bkt, seq = pool_try_alloc(kv.pool, plan.take, max_take,
@@ -531,21 +643,38 @@ def _chunk_phase(state: EngineState, chunk: int, budget: int,
     rowi = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[:, None],
                             (S, max_take))
     valid = k[None, :] < plan.take[:, None]
+    # a COW grant replaces the shared tail (column held−1) instead of
+    # extending the table; the replaced id is read BEFORE the scatter
+    base = jnp.where(plan.cow, held - 1, held) if sharing else held
+    old = kv.tbl[jnp.arange(S, dtype=jnp.int32),
+                 jnp.clip(held - 1, 0, MB - 1)]
     tbl = kv.tbl.at[jnp.where(valid, rowi, S),
-                    held[:, None] + k[None, :]].set(ids, mode="drop")
+                    base[:, None] + k[None, :]].set(ids, mode="drop")
+    n_cow = jnp.int32(0)
+    if sharing:
+        # ONE batched decref of every replaced shared block (identity on
+        # an empty mask; cond-skipped at runtime — most rounds copy
+        # nothing.  The host replica issues the SAME single batched call,
+        # keeping free-queue id order identical.)
+        pool = jax.lax.cond(
+            jnp.any(plan.cow),
+            lambda p: pool_release(p, old, plan.cow),
+            lambda p: p, pool)
+        n_cow = jnp.sum(plan.cow.astype(jnp.int32))
     sl = sl._replace(
         chunk=plan.tokens, parked=plan.parked,
         park_bucket=jnp.where(newly, bkt, sl.park_bucket),
-        park_seq=jnp.where(newly, seq, sl.park_seq))
+        park_seq=jnp.where(newly, seq, sl.park_seq),
+        cow_src=(jnp.where(plan.cow, old, -1) if sharing else sl.cow_src))
     state = state._replace(
-        kv=KVPool(pool=pool, tbl=tbl), slots=sl,
+        kv=KVPool(pool=pool, tbl=tbl, cache=kv.cache), slots=sl,
         stalls=state.stalls + jnp.sum(plan.parked.astype(jnp.int32)),
         chunks=state.chunks + jnp.sum((plan.tokens > 0).astype(jnp.int32)))
-    return state, plan.emit
+    return state, plan.emit, n_cow
 
 
 def _assign_slots(state: EngineState, admitted: jax.Array,
-                  chunked: bool = False):
+                  chunked: bool = False, cov=None):
     """Map admitted backlog rows to free slots: rows in wrap-safe per-tenant
     FCFS admission order (signed ticket distance from the post-round grant
     frontier, tenant index tiebreak — the in-graph `_fcfs_sort`) take
@@ -556,7 +685,10 @@ def _assign_slots(state: EngineState, admitted: jax.Array,
     at assignment; ``chunked`` starts the KV cursor at 0 (the prompt is
     prefilled chunk-by-chunk) instead of at ``prompt_len`` (instant
     prefill) and copies the prompt into the slot row so later chunks can
-    read it after the backlog row is recycled."""
+    read it after the backlog row is recycled.  With prefix sharing,
+    ``cov`` (B,) i32 is each row's cache-covered token count — the KV
+    cursor starts AT the divergence point (the covered tokens are
+    already resident in the shared blocks the caller attaches)."""
     sl, bl = state.slots, state.backlog
     S = sl.busy.shape[0]
     B = bl.valid.shape[0]
@@ -573,7 +705,10 @@ def _assign_slots(state: EngineState, admitted: jax.Array,
 
     slot_sema, _, _, _ = take_batch(state.slot_sema, assign)
     seed_tok = bl.prompt[rows, jnp.maximum(bl.prompt_len[rows] - 1, 0)]
-    pos0 = jnp.zeros_like(rows) if chunked else bl.prompt_len[rows]
+    if cov is not None:  # sharing: resume past the cache-covered prefix
+        pos0 = cov[rows]
+    else:
+        pos0 = jnp.zeros_like(rows) if chunked else bl.prompt_len[rows]
     slots = Slots(
         busy=sl.busy.at[tgt].set(True, mode="drop"),
         row=sl.row.at[tgt].set(rows, mode="drop"),
@@ -592,7 +727,11 @@ def _assign_slots(state: EngineState, admitted: jax.Array,
         park_bucket=sl.park_bucket.at[tgt].set(0, mode="drop"),
         park_seq=sl.park_seq.at[tgt].set(jnp.uint32(0), mode="drop"),
         chunk=sl.chunk.at[tgt].set(0, mode="drop"),
-        last_adv=sl.last_adv.at[tgt].set(state.round_no, mode="drop"))
+        last_adv=sl.last_adv.at[tgt].set(state.round_no, mode="drop"),
+        ph=(sl.ph.at[tgt].set(bl.ph[rows], mode="drop")
+            if sl.ph is not None else None),
+        cow_src=(sl.cow_src.at[tgt].set(-1, mode="drop")
+                 if sl.cow_src is not None else None))
     bslot = bl.slot.at[jnp.where(assign, rows, B)].set(tgt, mode="drop")
     return state._replace(slots=slots, slot_sema=slot_sema,
                           backlog=bl._replace(slot=bslot)), rows, assign, tgt
@@ -633,6 +772,11 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     chunked = chunk > 0
     assert not chunked or (paged and budget > 0), \
         "chunked prefill needs the block pool and a positive token budget"
+    # prefix sharing is a STATIC pytree property (cache present or not) —
+    # both modes trace once, and the no-sharing trace is unchanged
+    sharing = paged and state.kv.cache is not None
+    assert not sharing or chunked, \
+        "prefix sharing requires continuous chunked prefill"
     sl, bl = state.slots, state.backlog
     S = sl.busy.shape[0]
     now = jnp.asarray(now, jnp.float32)
@@ -655,7 +799,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
         state = state._replace(kv=jax.lax.cond(
             jnp.any(pre), lambda kv: KVPool(
                 pool=pool_release(kv.pool, kv.tbl, pre),
-                tbl=jnp.where(pre[:, None], -1, kv.tbl)),
+                tbl=jnp.where(pre[:, None], -1, kv.tbl),
+                cache=kv.cache),
             lambda kv: kv, state.kv))
 
     # (2) the QoS admission round, preemption-freed units feeding replenish.
@@ -686,13 +831,43 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     # — the host path's ``admitted.any()`` early-out).  Chunked prefill
     # gates on FIRST-CHUNK demand only, behind the reserved headroom that
     # keeps the no-deadlock invariant (module docstring).
+    doomed = None
+    sh_c = sh_bids = sh_tail = sh_cov = None
     if paged:
         if chunked:
-            demand = first_chunk_demand(bl.prompt_len, chunk, block_size)
             held = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32), axis=1)
-            rem = _slot_rem(state.slots, held, block_size)
+            if sharing:
+                # read-only longest-prefix probe (weak entries — the pool
+                # is untouched until the attach below incref's the hits)
+                sh_c, sh_bids, sh_tail, sh_cov = cache_lookup(
+                    state.kv.cache, state.kv.pool, bl.ph, bl.prompt_len,
+                    block_size)
+                # POST-DIVERGENCE demand: the covered blocks are free to
+                # attach (incref only) — admission pays for fresh blocks
+                # past the divergence point alone
+                demand = shared_first_chunk_demand(
+                    bl.prompt_len, sh_cov, chunk, block_size)
+                commit_demand = _block_demand(bl, block_size) - sh_c
+                # a row whose private demand exceeds the whole pool can
+                # NEVER be granted at the current coverage: skip it in the
+                # FCFS prefix (it must not dam later rows) but keep it
+                # live/stalled — future re-registration can resurrect it
+                NB = state.kv.pool.gen.shape[0]
+                doomed = commit_demand > NB
+                cow_a, held_free_a = _share_flags(
+                    state.kv.tbl, state.kv.pool.refcnt, state.slots.busy,
+                    state.slots.pos, state.slots.plen, held, block_size)
+                rem = (_slot_rem(state.slots, held, block_size)
+                       + jnp.where(cow_a, 1, 0))
+                held_cover = held_free_a
+            else:
+                demand = first_chunk_demand(bl.prompt_len, chunk,
+                                            block_size)
+                commit_demand = _block_demand(bl, block_size)
+                rem = _slot_rem(state.slots, held, block_size)
+                held_cover = held
             headroom = block_headroom(
-                rem, held,
+                rem, held_cover,
                 banker_order(rem, state.slots.prio_r, state.slots.prio_k,
                              state.slots.busy),
                 state.slots.busy)
@@ -700,7 +875,6 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
             # UNCOMMITTED budget (pipelined, unlike up-front — see
             # block_gate); the bootstrap flag keeps over-watermark
             # requests servable (alone, strict FCFS)
-            commit_demand = _block_demand(bl, block_size)
             total_rem = jnp.sum(rem)
             commit_free = commit - total_rem
             bootstrap = total_rem == 0
@@ -711,8 +885,9 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
 
         def _gate(args):
             qos, admitted, _ = args
-            granted = block_gate(admitted, demand,
-                                 _fcfs_key(bl, qos.grant, admitted),
+            eligible = (admitted & ~doomed) if sharing else admitted
+            granted = block_gate(eligible, demand,
+                                 _fcfs_key(bl, qos.grant, eligible),
                                  pool_free_count(state.kv.pool), headroom,
                                  commit_demand, commit_free, bootstrap)
             stalled = admitted & ~granted
@@ -733,7 +908,37 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     state = state._replace(qos=qos, backlog=bl)
 
     # (3) slot assignment (FCFS → ascending free slots)
-    state, rows, assign, tgt = _assign_slots(state, admitted, chunked)
+    state, rows, assign, tgt = _assign_slots(
+        state, admitted, chunked, cov=sh_cov if sharing else None)
+    n_hits = jnp.int32(0)
+    if sharing:
+        # (3a) attach the cache-covered prefix: seed the matched block ids
+        # into the fresh slots' tables and incref each — no counter moves,
+        # no pokes, no prefill flops for the covered tokens (`pool_incref`
+        # is the conditional-post mapping's free half)
+        kv = state.kv
+        MB = kv.tbl.shape[1]
+        Wc = min(sh_bids.shape[1], MB)
+        bids_r = sh_bids[rows][:, :Wc]             # (S, Wc) — -1 beyond c
+        tail_r = sh_tail[rows]                     # (S,)
+        c_r = sh_c[rows]
+        jW = jnp.arange(Wc, dtype=jnp.int32)
+        col_ok = assign[:, None] & (bids_r >= 0)
+        tgt_rows = jnp.where(assign, tgt, S)
+        tbl = kv.tbl.at[jnp.where(col_ok, tgt_rows[:, None], S),
+                        jW[None, :]].set(bids_r, mode="drop")
+        tail_ok = assign & (tail_r >= 0)
+        tbl = tbl.at[jnp.where(tail_ok, tgt, S),
+                     jnp.clip(c_r, 0, MB - 1)].set(tail_r, mode="drop")
+        pool = pool_incref(
+            kv.pool,
+            jnp.concatenate([bids_r, tail_r[:, None]], axis=1),
+            jnp.concatenate([col_ok, tail_ok[:, None]], axis=1))
+        state = state._replace(kv=KVPool(pool=pool, tbl=tbl,
+                                         cache=kv.cache))
+        # a fully-covered admit starts decode-ready: zero prefill flops
+        n_hits = jnp.sum((assign & (sh_cov[rows] >= bl.prompt_len[rows])
+                          & (bl.prompt_len[rows] > 0)).astype(jnp.int32))
     if paged and not chunked:
         # wrap-safe semaphore take of each granted slot's demand: ids pop
         # off the circular free queue at the ticket cursor in slot order
@@ -743,7 +948,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
                 jnp.where(assign, demand[rows], 0), mode="drop")
             pool, ids = pool_alloc(kv.pool, counts, kv.tbl.shape[1])
             return KVPool(pool=pool,
-                          tbl=jnp.where(counts[:, None] > 0, ids, kv.tbl))
+                          tbl=jnp.where(counts[:, None] > 0, ids, kv.tbl),
+                          cache=kv.cache)
 
         state = state._replace(kv=jax.lax.cond(
             jnp.any(assign), _alloc, lambda kv: kv, state.kv))
@@ -751,8 +957,9 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     # (3b) chunked prefill: plan chunks/budget, take blocks incrementally
     # (newly admitted slots request their FIRST chunk right here — the
     # blocks the gate's headroom check just promised), park the stalled.
+    n_cow = jnp.int32(0)
     if chunked:
-        state, emit = _chunk_phase(state, chunk, budget, block_size)
+        state, emit, n_cow = _chunk_phase(state, chunk, budget, block_size)
     if admit_fn is not None:  # in-graph prefill for newly admitted slots
         model = admit_fn(model, state, rows, assign, tgt)
 
@@ -766,12 +973,28 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     toks, model = token_fn(model, state)
     toks = jnp.where(emit, jnp.asarray(toks, jnp.int32), sl.token)
     adv = emit.astype(jnp.int32) + (sl.chunk if chunked else 0)
+    pos_old = sl.pos
     sl = sl._replace(token=toks,
                      emitted=sl.emitted + emit.astype(jnp.int32),
                      pos=sl.pos + adv,
                      # watchdog clock: any forward motion (token emitted
                      # or prefill chunk landed) re-arms the slot
                      last_adv=jnp.where(adv > 0, rno, sl.last_adv))
+    if sharing:
+        # (4b) publish prefixes at prefill COMPLETION: a slot whose cursor
+        # crossed plen this round registers one weak entry per full block
+        # boundary plus its partial tail (serving.prefix.cache_register —
+        # identity on an empty mask, cond-skipped at runtime; the host
+        # mirrors the same jitted call on its replica)
+        completed = sl.busy & (sl.pos >= sl.plen) & (pos_old < sl.plen)
+        kvr = state.kv
+        cache = jax.lax.cond(
+            jnp.any(completed),
+            lambda c: cache_register(c, kvr.pool, sl.ph, sl.plen, kvr.tbl,
+                                     completed, block_size),
+            lambda c: c, kvr.cache)
+        state = state._replace(kv=KVPool(pool=kvr.pool, tbl=kvr.tbl,
+                                         cache=cache))
 
     # (5) completion: done slots post back; their units bank for the NEXT
     # round (the host engine's `_qos_free` in kernel mode)
@@ -789,7 +1012,8 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
         state = state._replace(kv=jax.lax.cond(
             jnp.any(fin), lambda kv: KVPool(
                 pool=pool_release(kv.pool, kv.tbl, fin),
-                tbl=jnp.where(fin[:, None], -1, kv.tbl)),
+                tbl=jnp.where(fin[:, None], -1, kv.tbl),
+                cache=kv.cache),
             lambda kv: kv, state.kv))
     # (6) telemetry: append this round's end-of-round probe set to the
     # in-scan ring — same donated carry, zero extra host syncs.  Every
@@ -820,6 +1044,11 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
             kv_pokes=(jnp.sum(state.kv.pool.sema.bucket_seq,
                               dtype=jnp.uint32) if paged
                       else jnp.uint32(0)),
+            prefix_hits=n_hits if sharing else jnp.int32(0),
+            blocks_shared=(jnp.sum((state.kv.pool.refcnt >= 2)
+                                   .astype(jnp.int32)) if sharing
+                           else jnp.int32(0)),
+            cow_copies=n_cow if sharing else jnp.int32(0),
             health=round_health(state, model, rno, block_size=block_size,
                                 chunked=chunked, watchdog=watchdog),
             credit=_sdist(state.qos.grant, state.qos.consumed),
@@ -1095,7 +1324,25 @@ def _chunked_prefill_step(model, state: EngineState, window: int):
     rows_i = jnp.arange(S, dtype=jnp.int32)
     dbid = kv.tbl[rows_i, jnp.clip(sl.pos // BS, 0, MB - 1)]
     wr = ready & (dbid >= 0)
+    if sl.cow_src is not None:
+        # sharing: NEVER write a block another slot can read — a slot
+        # whose copy-on-write take was denied this round still points at
+        # the shared tail (the engine's emit mask already drops its
+        # sample; this drops its KV write too)
+        wr = wr & (kv.pool.refcnt[jnp.clip(dbid, 0, NB - 1)] <= 1)
     dbsel = jnp.where(wr, dbid, NB)
+    if sl.cow_src is not None:
+        # copy-on-write: a slot granted a private replacement for its
+        # shared tail this round copies the whole shared block into it
+        # BEFORE its decode write lands (the source stays intact this
+        # round even if its refcount just hit zero — freed ids cannot be
+        # re-granted before the NEXT round's alloc).  dbid IS the fresh
+        # private block: the write cursor sits inside the replaced column.
+        do_cow = wr & (sl.cow_src >= 0)
+        csel = jnp.where(do_cow, dbid, NB)
+        src = jnp.clip(sl.cow_src, 0, NB - 1)
+        kp = kp.at[csel].set(kp[src], mode="drop")
+        vp = vp.at[csel].set(vp[src], mode="drop")
     kp = kp.at[dbsel, sl.pos % BS, 0].set(cur, mode="drop")
     vp = vp.at[dbsel, sl.pos % BS, 0].set(cur, mode="drop")
     lens = jnp.where(wr, sl.pos + 1, 0)

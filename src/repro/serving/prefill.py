@@ -94,6 +94,26 @@ def total_block_demand(prompt_len, max_new, block_size: int):
                             + jnp.asarray(max_new, jnp.int32), block_size), 1)
 
 
+def shared_first_chunk_demand(prompt_len, cov, chunk: int, block_size: int):
+    """Post-divergence first-chunk demand — what chunked admission gates
+    on when a prompt's leading ``cov`` tokens are already resident in
+    shared blocks (prefix cache hit; ``cov`` is block-aligned unless it
+    covers the whole prompt).  Only the tokens past the divergence point
+    need fresh blocks: ``⌈min(chunk, plen − cov)/BS⌉``.  A fully-covered
+    prompt with a shared partial tail block needs ZERO blocks to start
+    (its first decode writes land in the shared tail, copy-on-write); a
+    fully-covered block-aligned prompt needs one (its first decode write
+    opens a fresh block).  Reduces to :func:`first_chunk_demand` at
+    ``cov = 0``."""
+    plen = jnp.asarray(prompt_len, jnp.int32)
+    cov = jnp.asarray(cov, jnp.int32)
+    aligned = cov == (cov // block_size) * block_size
+    return jnp.where(
+        cov >= plen,
+        jnp.where(aligned & (cov >= plen), jnp.int32(1), jnp.int32(0)),
+        jnp.maximum(cdiv(jnp.minimum(plen - cov, chunk), block_size), 1))
+
+
 def pending_prompt_tokens(pos: jax.Array, plen: jax.Array,
                           busy: jax.Array) -> jax.Array:
     """Prompt tokens still waiting to be prefilled across the busy slots —
@@ -155,13 +175,16 @@ class ChunkPlan(NamedTuple):
     deficit: jax.Array  # (S,) i32 — grant advance that makes a parked slot
     #                     runnable again (≥ 1 where parked; park_state input)
     emit: jax.Array     # (S,) bool — decode-ready this round (post-take)
+    cow: jax.Array      # (S,) bool — granted a copy-on-write block this
+    #                     round: the take REPLACES the slot's current write
+    #                     block (copy shared portion, decref the original)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "budget", "block_size"))
 def chunk_plan(order: jax.Array, busy: jax.Array, parked: jax.Array,
                woken: jax.Array, pos: jax.Array, plen: jax.Array,
-               max_new: jax.Array, held: jax.Array, free, *, chunk: int,
-               budget: int, block_size: int) -> ChunkPlan:
+               max_new: jax.Array, held: jax.Array, free, cow, held_free,
+               *, chunk: int, budget: int, block_size: int) -> ChunkPlan:
     """Plan one engine round of continuous chunked prefill: split the
     per-round prefill token ``budget`` over the prefilling slots, decide
     every incremental block take (prefill chunks AND decode block-boundary
@@ -193,7 +216,23 @@ def chunk_plan(order: jax.Array, busy: jax.Array, parked: jax.Array,
     realized tokens only (work conservation: blocks denied ⇒ budget flows
     to the next slot).  Decode does not consume budget (the schedule is
     decode-maximal: every decode-ready slot decodes every round).
-    Returns a :class:`ChunkPlan` in unsorted slot order.
+
+    Prefix sharing (PR 9) adds two inputs.  ``cow`` (S,) bool flags a
+    decode-ready slot whose NEXT write block is shared (``refcnt > 1`` —
+    a prefix-cache tail it attached to): before it may emit it needs one
+    private block — an atomic 1-block take exactly like a boundary
+    crossing, except the grant REPLACES the current write block (the
+    engine copies the shared portion and decrefs the original).  A
+    pending copy-on-write raises the slot's remaining demand by one (the
+    swap consumes a free block without shrinking ``total − held``).
+    ``held_free`` (S,) i32 is each slot's RELEASABLE held count — only
+    privately-held blocks (``refcnt == 1``) return to the pool when the
+    slot finishes, so the Banker chain's ``Σ held`` cover must count
+    those alone (a shared block's free is funded by its LAST sharer,
+    which the chain conservatively ignores).  With no sharing enabled
+    (``cow`` all-False, ``held_free == held``) every formula reduces to
+    the PR-5 plan bit-identically.  Returns a :class:`ChunkPlan` in
+    unsorted slot order.
     """
     BS = block_size
     S = busy.shape[0]
@@ -201,38 +240,44 @@ def chunk_plan(order: jax.Array, busy: jax.Array, parked: jax.Array,
     pos = jnp.asarray(pos, jnp.int32)
     plen = jnp.asarray(plen, jnp.int32)
     held = jnp.asarray(held, jnp.int32)
-    rem = total_block_demand(plen, max_new, BS) - held
+    cow_in = jnp.asarray(cow, bool)
+    held_free = jnp.asarray(held_free, jnp.int32)
+    rem = (total_block_demand(plen, max_new, BS) - held
+           + jnp.where(cow_in, 1, 0))
     trying = busy & (~parked | woken)
     prefilling = busy & (pos < plen)
 
-    held_b = jnp.where(busy, held, 0)[order]
+    held_b = jnp.where(busy, held_free, 0)[order]
     cum_held = jnp.cumsum(held_b) - held_b  # A_j: Σ held of priority-preds
     xs = (cum_held,) + tuple(a[order] for a in (busy, trying, prefilling,
-                                                pos, plen, held, rem))
+                                                pos, plen, held, rem,
+                                                cow_in))
 
     def body(carry, x):
         T, minM, budget_left = carry
-        A, b, t, pf, p, pl, h, r = x
+        A, b, t, pf, p, pl, h, r, cw = x
         want = jnp.where(pf & t, jnp.minimum(chunk, pl - p), 0)
         ctb = jnp.minimum(want, budget_left)
         need_pf = jnp.maximum(cdiv(p + ctb, BS) - h, 0)
         dec_try = b & ~pf & t & (p >= h * BS)
-        need = jnp.where(pf, need_pf, jnp.where(dec_try, 1, 0))
+        cow_try = b & ~pf & t & cw & (p < h * BS)
+        atomic = dec_try | cow_try              # one block, all-or-nothing
+        need = jnp.where(pf, need_pf, jnp.where(atomic, 1, 0))
         cap = jnp.minimum(free, minM) - T
         take = jnp.where(pf, jnp.clip(cap, 0, need),
-                         jnp.where(dec_try & (need <= cap), need, 0))
+                         jnp.where(atomic & (need <= cap), need, 0))
         ct = jnp.where(pf, jnp.minimum(ctb, (h + take) * BS - p), 0)
         newly = t & ((pf & (ctb > 0) & (ct == 0))
-                     | (dec_try & (take == 0)))
+                     | (atomic & (take == 0)))
         deficit = jnp.where(newly, 1 - jnp.minimum(cap, 0), 0)
         # this slot's margin for every LATER taker: M_j = free + A_j + T_j
         # + take_j − rem_j (invariant (I) rearranged; T is the exclusive
         # cumulative take carried in)
         M = jnp.where(b, free + A + T + take - r, INT32_MAX)
         carry = (T + take, jnp.minimum(minM, M), budget_left - ct)
-        return carry, (take, ct, newly, deficit)
+        return carry, (take, ct, newly, deficit, cow_try & (take > 0))
 
-    (_, _, _), (take_s, ct_s, park_s, def_s) = jax.lax.scan(
+    (_, _, _), (take_s, ct_s, park_s, def_s, cow_s) = jax.lax.scan(
         body, (jnp.int32(0), jnp.int32(INT32_MAX), jnp.int32(budget)), xs)
 
     inv = jnp.zeros((S,), jnp.int32).at[order].set(
@@ -242,6 +287,10 @@ def chunk_plan(order: jax.Array, busy: jax.Array, parked: jax.Array,
     deficit = def_s[inv]
     still_parked = busy & parked & ~woken
     parked_out = park_s[inv] | still_parked
-    emit = busy & ~prefilling & (pos < (held + take) * BS)
+    # a slot with a pending copy-on-write may not emit until granted (its
+    # write would land in the shared block); all other decode-ready slots
+    # emit exactly as before
+    emit = (busy & ~prefilling & (pos < (held + take) * BS)
+            & (~cow_in | (take > 0)))
     return ChunkPlan(take=take, tokens=tokens, parked=parked_out,
-                     deficit=deficit, emit=emit)
+                     deficit=deficit, emit=emit, cow=cow_s[inv])

@@ -1,0 +1,208 @@
+"""Prompt-prefix cache — the hash index behind refcounted block sharing.
+
+Heavy multi-tenant traffic is dominated by requests repeating a system
+prompt.  With the `core.functional.BlockPool` refcounted (PR 9), a
+request whose prompt prefix is already resident only needs the MAPPING
+from prefix content to live block ids; this module is that mapping — a
+small, fixed-shape, direct-mapped cache that lives inside the scanned
+engine state (a pytree leaf of `engine_state.KVPool`), so lookups and
+registrations happen in-graph at megastep speed and the host `step()`
+path mirrors them bit-identically by calling the same jitted functions
+on its replica.
+
+Design constraints and the choices they force:
+
+* **Weak entries.**  The cache holds NO refcount: an entry is a
+  ``(key, block id, generation)`` triple, valid iff the pool's per-block
+  ``gen`` stamp still equals the recorded one.  Freeing a block bumps
+  its ``gen`` (`pool_release`), killing every entry that pointed at it —
+  so the conservation invariant stays exactly ``Σ table references =
+  Σ refcnt`` with the cache contributing nothing, and a dead entry can
+  never resurrect a reused block.
+
+* **Content is identified by hash only.**  Keys are two independent
+  32-bit FNV-1a chains over the token sequence (64 bits of match), the
+  same u32 arithmetic on host (`prompt_hashes`, at ``submit()``) and
+  device (the hashes ride the backlog/slot state as data — nothing is
+  re-hashed in-graph).  A 2⁻⁶⁴ collision shares a wrong block; real
+  deployments would verify tokens, the reproduction accepts the odds.
+
+* **Direct-mapped, deterministic.**  ``entries`` is a power of two;
+  an entry's home slot is ``key & (E−1)``; a colliding registration
+  overwrites (newest wins).  Registration happens when a slot FINISHES
+  prefill: each fully-written block boundary publishes one entry, and a
+  partially-filled tail block publishes a full-prompt entry carrying its
+  ``filled`` count (the copy length for copy-on-write).  Same-round
+  duplicate prompts therefore both miss and both prefill — sharing
+  starts one completed prefill later (benches stagger arrivals).
+
+Lookup returns the longest chain of matching *full* block entries
+(blocks 0..c−1 attach by `pool_incref`, prefill resumes at ``c·BS``)
+plus, when the whole prompt matches, the shared tail block — the
+request then skips prefill entirely (zero flops, zero new HBM) and its
+first diverging decode write goes copy-on-write (`prefill.chunk_plan`'s
+``cow`` take).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# two independent FNV-1a chains — 64 bits of content identity
+_OFF1, _PRIME1 = 0x811C9DC5, 0x01000193
+_OFF2, _PRIME2 = 0x9E3779B9, 0x85EBCA6B
+_M32 = 0xFFFFFFFF
+
+
+class PrefixCache(NamedTuple):
+    """Direct-mapped weak prefix index (all fields length-E vectors).
+    ``bid < 0`` marks an empty entry; a non-empty entry is live iff
+    ``pool.gen[bid] == gen`` (weak reference).  ``filled`` is the number
+    of valid tokens in the block: ``BS`` for a full-block entry, the
+    tail length for a full-prompt (tail) entry."""
+
+    key: jax.Array     # (E,) u32 — FNV chain 1 at the covered length
+    key2: jax.Array    # (E,) u32 — FNV chain 2 (collision guard)
+    bid: jax.Array     # (E,) i32 — block id (-1 = empty)
+    gen: jax.Array     # (E,) u32 — pool.gen[bid] at registration
+    filled: jax.Array  # (E,) i32 — valid tokens in the block
+
+
+def make_prefix_cache(entries: int) -> PrefixCache:
+    assert entries > 0 and (entries & (entries - 1)) == 0, \
+        "prefix cache entries must be a power of two (key & (E-1) homes)"
+    return PrefixCache(
+        key=jnp.zeros((entries,), jnp.uint32),
+        key2=jnp.zeros((entries,), jnp.uint32),
+        bid=jnp.full((entries,), -1, jnp.int32),
+        gen=jnp.zeros((entries,), jnp.uint32),
+        filled=jnp.zeros((entries,), jnp.int32))
+
+
+def prompt_hashes(prompt: Sequence[int], block_size: int,
+                  width: int) -> list[list[int]]:
+    """Host-side hashing at ``submit()`` — the ONLY place tokens are
+    hashed; the resulting ``(2, width+1)`` u32 table rides the request
+    into the backlog/slot state as plain data.  Column ``j < width``
+    holds the chain value after ``(j+1)·BS`` tokens (the key of full
+    block ``j``); column ``width`` holds the full-prompt value (the tail
+    key).  Unreached boundaries stay 0 — harmless, lookup masks them by
+    ``j < plen // BS``."""
+    h1, h2 = _OFF1, _OFF2
+    row1, row2 = [0] * (width + 1), [0] * (width + 1)
+    for i, t in enumerate(prompt):
+        t = int(t) & _M32
+        h1 = ((h1 ^ t) * _PRIME1) & _M32
+        h2 = ((h2 ^ t) * _PRIME2) & _M32
+        if (i + 1) % block_size == 0 and (i + 1) // block_size <= width:
+            row1[(i + 1) // block_size - 1] = h1
+            row2[(i + 1) // block_size - 1] = h2
+    row1[width], row2[width] = h1, h2
+    return [row1, row2]
+
+
+def cache_lookup(cache: PrefixCache, pool, ph: jax.Array, plen: jax.Array,
+                 block_size: int):
+    """Vectorized longest-prefix probe for a batch of prompts.
+
+    ``ph``: (B, 2, W+1) u32 hash tables (`prompt_hashes` layout);
+    ``plen``: (B,) i32 prompt lengths.  Returns
+
+      ``c``        (B,)   i32 — matched full blocks (longest chain)
+      ``bids``     (B, W) i32 — their block ids (-1 beyond ``c``)
+      ``tail_bid`` (B,)   i32 — shared tail block (-1 = no tail hit)
+      ``cov``      (B,)   i32 — covered prompt tokens (``c·BS`` or plen)
+
+    A full-block entry matches only while the chain is unbroken (an
+    evicted middle block cuts the usable prefix there); the tail entry
+    matches only when every full block matched AND the recorded
+    ``filled`` equals this prompt's tail length."""
+    E = cache.key.shape[0]
+    NB = pool.gen.shape[0]
+    W = ph.shape[2] - 1
+    plen = jnp.asarray(plen, jnp.int32)
+    n_full = jnp.minimum(plen // block_size, W)
+    tail_len = plen - n_full * block_size
+
+    def probe(k1, k2):
+        idx = (k1 & jnp.uint32(E - 1)).astype(jnp.int32)
+        bid = cache.bid[idx]
+        ok = ((bid >= 0) & (cache.key[idx] == k1) & (cache.key2[idx] == k2)
+              & (pool.gen[jnp.clip(bid, 0, NB - 1)] == cache.gen[idx]))
+        return ok, bid, cache.filled[idx]
+
+    ok_j, bid_j, fill_j = probe(ph[:, 0, :W], ph[:, 1, :W])  # (B, W)
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]
+    hit = ok_j & (fill_j == block_size) & (j < n_full[:, None])
+    # longest unbroken chain from block 0
+    c = jnp.sum(jnp.cumprod(hit.astype(jnp.int32), axis=1), axis=1)
+    bids = jnp.where(j < c[:, None], bid_j, -1)
+    ok_t, bid_t, fill_t = probe(ph[:, 0, W], ph[:, 1, W])
+    tail_hit = ok_t & (c == n_full) & (tail_len > 0) & (fill_t == tail_len)
+    tail_bid = jnp.where(tail_hit, bid_t, -1)
+    cov = jnp.where(tail_hit, plen, c * block_size)
+    return c, bids, tail_bid, cov
+
+
+def cache_register(cache: PrefixCache, pool, ph: jax.Array,
+                   plen: jax.Array, tbl: jax.Array, completed: jax.Array,
+                   block_size: int) -> PrefixCache:
+    """Publish the prefixes of slots that COMPLETED prefill this round.
+
+    For each slot flagged in ``completed`` (S,): one entry per full
+    block boundary (``filled = BS``) plus, when the prompt has a
+    partial tail block, one full-prompt entry (``filled = tail``).
+    Deterministic under collisions: conceptually entries apply in
+    (slot, boundary) order and the LAST writer wins — computed as one
+    vectorized pairwise sweep, so the scatter sees unique homes.
+    Re-registering an already-shared prefix is idempotent (same key,
+    same bid, unchanged gen)."""
+    E = cache.key.shape[0]
+    NB = pool.gen.shape[0]
+    S = plen.shape[0]
+    W = ph.shape[2] - 1
+    plen = jnp.asarray(plen, jnp.int32)
+    n_full = jnp.minimum(plen // block_size, W)        # (S,)
+    tail_len = plen - n_full * block_size
+    j = jnp.arange(W + 1, dtype=jnp.int32)[None, :]    # (1, W+1)
+    is_tail = j == W
+    valid = completed[:, None] & (
+        (j < n_full[:, None]) | (is_tail & (tail_len[:, None] > 0)))
+    # a tail entry points at block n_full (the partially-filled block)
+    blk_ix = jnp.where(is_tail, jnp.minimum(n_full[:, None], tbl.shape[1] - 1),
+                       jnp.minimum(j, tbl.shape[1] - 1))
+    bid = jnp.take_along_axis(tbl, blk_ix, axis=1)     # (S, W+1)
+    valid = valid & (bid >= 0)
+    k1 = ph[:, 0, :].reshape(-1)
+    k2 = ph[:, 1, :].reshape(-1)
+    bid = bid.reshape(-1)
+    valid = valid.reshape(-1)
+    filled = jnp.where(is_tail, tail_len[:, None],
+                       jnp.int32(block_size)).reshape(-1)
+    gen = pool.gen[jnp.clip(bid, 0, NB - 1)]
+    idx = (k1 & jnp.uint32(E - 1)).astype(jnp.int32)
+    # last valid writer per home wins: N = S·(W+1) is small (slots ×
+    # table width), so the pairwise "someone later hits my home" sweep
+    # stays cheap and keeps the scatter unique → deterministic
+    n = idx.shape[0]
+    later = (jnp.arange(n)[None, :] > jnp.arange(n)[:, None])
+    shadowed = jnp.any(later & valid[None, :] & (idx[None, :] == idx[:, None]),
+                       axis=1)
+    win = valid & ~shadowed
+    tgt = jnp.where(win, idx, E)
+    return PrefixCache(
+        key=cache.key.at[tgt].set(k1, mode="drop"),
+        key2=cache.key2.at[tgt].set(k2, mode="drop"),
+        bid=cache.bid.at[tgt].set(bid, mode="drop"),
+        gen=cache.gen.at[tgt].set(gen, mode="drop"),
+        filled=cache.filled.at[tgt].set(filled, mode="drop"))
+
+
+def cache_clear(cache: PrefixCache) -> PrefixCache:
+    """Drop every entry (post-audit: block identities were rebuilt, so no
+    weak reference can be trusted).  Cheaper and strictly safer than
+    re-stamping generations."""
+    return cache._replace(bid=jnp.full_like(cache.bid, -1))

@@ -66,13 +66,25 @@ from ..admission.functional_qos import (
 )
 from ..core.functional import (
     SemaState,
+    make_block_pool,
     make_sema,
     next_pow2 as _next_pow2,
+    pool_free_count,
+    pool_incref,
+    pool_release,
+    pool_try_alloc,
     post_batch,
     take_batch,
     woken_mask,
 )
 from ..core.twa_semaphore import TWASemaphore
+from .prefix import (
+    cache_clear,
+    cache_lookup,
+    cache_register,
+    make_prefix_cache,
+    prompt_hashes,
+)
 
 
 @dataclass
@@ -116,6 +128,13 @@ class Request:
     #                           (host mirror of Slots.last_adv — the
     #                           stuck-slot watchdog's clock)
     retries: int = 0  # quarantine-requeue attempts consumed (recovery ladder)
+    # --- prefix sharing (serving.prefix, prefix_cache= engines) ---
+    ph: Optional[np.ndarray] = None  # (2, W+1) u32 prompt-hash table,
+    #                                  computed ONCE at submit (the only
+    #                                  place tokens are hashed — device
+    #                                  and host both consume it as data)
+    share: Optional[tuple] = None  # gate-time cache hit staged for the
+    #                                attach: (c, bids, tail_bid, cov)
 
 
 @dataclass
@@ -131,6 +150,9 @@ class EngineStats:
     host_syncs: int = 0  # host↔device round-trips (1/step; 1/megastep)
     kv_block_stalls: int = 0  # cumulative parked slot-rounds (block waits)
     prefill_chunks: int = 0  # prompt chunks written (chunked prefill)
+    prefix_hits: int = 0  # admissions whose whole prompt was cache-covered
+    #                       (zero prefill flops — prefix_cache= engines)
+    cow_copies: int = 0  # copy-on-write block copies (diverging sharers)
     # --- recovery ladder (repro.resilience.recovery / serving.sentinels) ---
     quarantined: int = 0  # rung 1: sick slots evicted (blocks released)
     requeued: int = 0  # quarantined requests re-submitted after backoff
@@ -157,6 +179,7 @@ class ContinuousBatchingEngine:
         prompt_cap: int = 32,
         kv_pool: Optional[tuple] = None,
         chunked_prefill: Optional[tuple] = None,
+        prefix_cache: int = 0,
         obs=None,
         watchdog: int = 0,
     ):
@@ -211,6 +234,8 @@ class ContinuousBatchingEngine:
         self._round_gate_stalls = 0
         self._round_prefill_tokens = 0
         self._round_prefill_chunks = 0
+        self._round_prefix_hits = 0
+        self._round_cow_copies = 0
         self._backlog_cap = backlog_cap  # megastep device backlog ceiling
         self._prompt_cap = prompt_cap  # megastep padded prompt ceiling
         self.megastep_model = None  # device model pytree (megastep mode)
@@ -273,6 +298,37 @@ class ContinuousBatchingEngine:
             # `engine_state.make_engine_state`'s pool (slot_table=64) so
             # host-loop and megastep runs observe identical bucket moves
             self._kv_sema = make_sema(count=nb, table_size=64)
+        # --- refcounted prefix sharing (serving.prefix, PR 9) ---
+        # ``prefix_cache=E`` (power-of-two entries; requires chunked
+        # prefill) attaches the weak prompt-prefix cache: admissions whose
+        # prompt prefix is already pool-resident attach the shared blocks
+        # by `pool_incref` (zero prefill flops, zero new HBM) and pay
+        # admission only for post-divergence demand.  Counters are no
+        # longer a sufficient host mirror — block IDENTITIES and refcounts
+        # decide sharing — so the host keeps a full replica of the device
+        # pool (`_kv_hpool`/`_kv_htbl`/`_kv_cache`) and mutates it through
+        # the SAME jitted functions the scanned round uses, in the SAME
+        # batched call pattern (one release per preempt/cow/finish phase —
+        # sequential per-request releases would reorder the free queue).
+        self._kv_share = int(prefix_cache) > 0
+        if self._kv_share:
+            if not self._chunk:
+                raise ValueError(
+                    "prefix_cache requires continuous chunked prefill "
+                    "(chunked_prefill=...): shared prefixes resume at the "
+                    "divergence point mid-prompt")
+            e = int(prefix_cache)
+            if e & (e - 1):
+                raise ValueError(
+                    f"prefix_cache needs a power-of-two entry count "
+                    f"(direct-mapped homes are key & (E-1)), got {e}")
+            self._kv_prefix = e
+            self._hash_w = self._prompt_cap // self._kv_bs
+            self._kv_hpool = make_block_pool(self._kv_blocks, table_size=64)
+            self._kv_cache = make_prefix_cache(e)
+            self._kv_htbl = np.full((n_slots, self._kv_mb), -1, np.int32)
+            self._kv_sema = self._kv_hpool.sema
+            self._kv_refcnt_h = np.zeros(self._kv_blocks, np.int32)
         # --- multi-tenant QoS admission (admission.functional_qos) ---
         self._tenants = tenants
         if tenants is not None:
@@ -381,8 +437,29 @@ class ContinuousBatchingEngine:
                 # a no-op in chunked mode: ONE demand formula everywhere
                 # (host gate/headroom/chunk phase and the device paths all
                 # reduce to it — the bit-identity mirror depends on that)
+                if self._kv_share and r.ph is None:
+                    # hash ONCE, here: the (2, W+1) u32 table rides the
+                    # request as plain data (device lookups re-use it)
+                    r.ph = np.asarray(
+                        prompt_hashes(r.prompt or [0], self._kv_bs,
+                                      self._hash_w), np.uint32)
                 dem = self._kv_demand(r)
                 if dem > cap:
+                    if self._kv_share and dem <= self._kv_mb:
+                        # post-divergence demand: blocks covered by a
+                        # cached prefix attach by incref (zero pool
+                        # demand) — a request over the raw pool size is
+                        # still servable while its prefix stays resident.
+                        # Weak entries can die later; the gate then holds
+                        # it stalled (doomed) until re-registration
+                        # resurrects the coverage.
+                        plen = min(len(r.prompt), self._prompt_cap) or 1
+                        c, _, _, cv = cache_lookup(
+                            self._kv_cache, self._kv_hpool,
+                            jnp.asarray(r.ph)[None],
+                            jnp.asarray([plen], jnp.int32), self._kv_bs)
+                        if dem - int(c[0]) <= self._kv_blocks:
+                            continue
                     raise ValueError(
                         f"request rid={r.rid} needs {dem} KV blocks over "
                         f"its lifetime (> {cap} = min(table, pool)): "
@@ -445,6 +522,7 @@ class ContinuousBatchingEngine:
         both in gate order; granted requests get their Banker priority
         key stamped."""
         from .engine_state import _D_CLAMP, _T_BITS
+        from .prefill import shared_first_chunk_demand
 
         grants = np.asarray(self.qos.grant)
 
@@ -457,29 +535,73 @@ class ContinuousBatchingEngine:
         order = sorted(range(len(cands)), key=key)
         free = self._kv_free_blocks
         commit_free = bootstrap = 0
+        share = None
         if self._chunk:
-            free -= self._kv_headroom()
-            total_rem = sum(self._kv_rem(r) for r in self.active.values())
+            cow = hf = None
+            if self._kv_share:
+                cow, hf = self._kv_share_state()
+                # read-only longest-prefix probe over the candidates (the
+                # device gate's `cache_lookup` over the backlog) — demand
+                # past the divergence point only
+                pln = np.asarray(
+                    [min(len(r.prompt), self._prompt_cap) or 1
+                     for r, _ in cands], np.int32)
+                ph = np.stack([np.asarray(r.ph, np.uint32)
+                               for r, _ in cands]) if cands else \
+                    np.zeros((0, 2, self._hash_w + 1), np.uint32)
+                c_a, bids_a, tail_a, cov_a = cache_lookup(
+                    self._kv_cache, self._kv_hpool, jnp.asarray(ph),
+                    jnp.asarray(pln), self._kv_bs)
+                dem_a = np.asarray(shared_first_chunk_demand(
+                    jnp.asarray(pln), cov_a, self._chunk, self._kv_bs))
+                c_a, bids_a = np.asarray(c_a), np.asarray(bids_a)
+                tail_a, cov_a = np.asarray(tail_a), np.asarray(cov_a)
+                commit_a = np.asarray(
+                    [self._kv_demand(r) for r, _ in cands],
+                    np.int64) - c_a
+                # a row whose post-divergence demand exceeds the whole
+                # pool can never be granted at current coverage: skip it
+                # in the FCFS prefix (it must not dam later rows), keep
+                # it stalled — re-registration can resurrect it
+                doomed_a = commit_a > self._kv_blocks
+                share = (c_a, bids_a, tail_a, cov_a, dem_a, commit_a,
+                         doomed_a)
+            free -= self._kv_headroom(share=(cow, hf))
+            total_rem = sum(
+                self._kv_rem(r) + (1 if cow is not None and cow[s] else 0)
+                for s, r in self.active.items())
             commit_free = self._kv_commit - total_rem
             bootstrap = total_rem == 0
         granted, stalled = [], []
+        dammed = False  # strict FCFS: first ELIGIBLE misfit blocks all
         for i in order:
             r = cands[i][0]
             if self._chunk:
-                dem = self._kv_first_chunk(r)
-                commit = self._kv_demand(r)
+                if share is not None:
+                    if share[6][i]:  # doomed: skip, don't dam successors
+                        stalled.append(i)
+                        continue
+                    dem = int(share[4][i])
+                    commit = int(share[5][i])
+                else:
+                    dem = self._kv_first_chunk(r)
+                    commit = self._kv_demand(r)
                 ok = dem <= free and (commit <= commit_free
                                       or (bootstrap and not granted))
             else:
                 dem = self._kv_demand(r)
                 commit = 0
                 ok = dem <= free
-            if not stalled and ok:  # strict FCFS: first misfit blocks all
+            if not dammed and ok:
                 free -= dem
                 commit_free -= commit
                 r.prio_key = key(i)
+                if share is not None:
+                    r.share = (int(share[0][i]), share[1][i],
+                               int(share[2][i]), int(share[3][i]))
                 granted.append(i)
             else:
+                dammed = True
                 stalled.append(i)
         if not self._chunk:
             # up-front take: the host block-semaphore mirror's ticket
@@ -506,21 +628,85 @@ class ContinuousBatchingEngine:
         (`_kv_demand` minus the blocks already taken)."""
         return self._kv_demand(r) - r.kv_blocks
 
-    def _kv_headroom(self) -> int:
+    def _kv_share_state(self):
+        """Per-slot ``(cow, held_free)`` off the sharing replica — ONE
+        call into the canonical `engine_state._share_flags` (host and
+        device must never fork the formulas).  ``cow[s]``: the slot's
+        next decode write lands in a still-shared tail block (it owes a
+        private copy); ``held_free[s]``: blocks the slot alone references
+        (the only Banker cover its release can fund)."""
+        from .engine_state import _share_flags
+
+        S = self.n_slots
+        busy = np.zeros(S, bool)
+        pos = np.zeros(S, np.int32)
+        plen = np.zeros(S, np.int32)
+        held = (self._kv_htbl >= 0).sum(axis=1).astype(np.int32)
+        for s, r in self.active.items():
+            pl = min(len(r.prompt), self._prompt_cap) or 1
+            busy[s] = True
+            pos[s] = (r.prefill_pos if r.prefill_pos < pl
+                      else pl + len(r.out_tokens))
+            plen[s] = pl
+        cow, hf = _share_flags(
+            jnp.asarray(self._kv_htbl), self._kv_hpool.refcnt,
+            jnp.asarray(busy), jnp.asarray(pos), jnp.asarray(plen),
+            jnp.asarray(held), self._kv_bs)
+        return np.asarray(cow), np.asarray(hf)
+
+    def _hshare_sync(self) -> None:
+        """Re-derive every host counter mirror from the sharing replica
+        after a pool mutation (the replica is the single source of truth
+        in prefix_cache mode — `telemetry()` and `_host_sample` read
+        these mirrors, never device arrays)."""
+        self._kv_sema = self._kv_hpool.sema
+        self._kv_free_blocks = int(pool_free_count(self._kv_hpool))
+        self._kv_refcnt_h = np.asarray(self._kv_hpool.refcnt)
+
+    def _hshare_release(self, slots: list[int]) -> None:
+        """ONE batched decref of every block the given slots hold —
+        mirroring the device round's single `pool_release` per phase
+        (preempt / finish / quarantine).  Sequential per-slot releases
+        would enqueue freed ids in a different free-queue order and
+        diverge from the megastep path."""
+        if not slots:
+            return
+        mask = np.zeros(self.n_slots, bool)
+        mask[slots] = True
+        self._kv_hpool = pool_release(
+            self._kv_hpool, jnp.asarray(self._kv_htbl), jnp.asarray(mask))
+        self._kv_htbl[mask] = -1
+        self._hshare_sync()
+
+    def _kv_headroom(self, share=None) -> int:
         """Host mirror of `functional_qos.block_headroom` over the
         nearest-completion safety chain (`prefill.banker_order`): the
         smallest free-pool level that keeps every active sequence's
         remaining worst-case demand covered by the pool plus what its
         chain-predecessors will release (see engine_state.py's
-        headroom-invariant docs)."""
+        headroom-invariant docs).  With prefix sharing, a pending
+        copy-on-write still owes one block (rem + 1) and only
+        privately-held blocks fund the cover (``held_free``, not the
+        table count) — `serving.sentinels.round_health` applies the same
+        generalization in-graph."""
+        cow = hf = None
+        if share is not None:
+            cow, hf = share
+        elif self._kv_share:
+            cow, hf = self._kv_share_state()
+
+        def rem_of(s: int, r: Request) -> int:
+            return self._kv_rem(r) + (1 if cow is not None and cow[s]
+                                      else 0)
+
         acts = sorted(self.active.items(),
-                      key=lambda kv: (self._kv_rem(kv[1]),
+                      key=lambda kv: (rem_of(*kv),
                                       kv[1].admit_round, kv[1].prio_key,
                                       kv[0]))
         cum = head = 0
-        for _, r in acts:
-            head = max(head, self._kv_rem(r) - cum)
-            cum += r.kv_blocks
+        for s, r in acts:
+            head = max(head, rem_of(s, r) - cum)
+            cum += int(hf[s]) if hf is not None else r.kv_blocks
         return max(head, 0)
 
     def _fcfs_sort(self, reqs: list[Request]) -> None:
@@ -787,9 +973,14 @@ class ContinuousBatchingEngine:
                 # post back, and the host block semaphore pokes the
                 # waiting-array buckets of the enabled range — exactly the
                 # device `pool_release`, so parked requests observe the
-                # same wake sequence the megastep path would
-                self._kv_free_blocks += req.kv_blocks
-                self._kv_sema = post_batch(self._kv_sema, req.kv_blocks)
+                # same wake sequence the megastep path would.  In sharing
+                # mode the caller already decref'd the slot's table row in
+                # ONE batched `_hshare_release` (kv_blocks was zeroed) —
+                # only the last sharer's release moves the counter.
+                if req.kv_blocks:
+                    self._kv_free_blocks += req.kv_blocks
+                    self._kv_sema = post_batch(self._kv_sema,
+                                               req.kv_blocks)
                 req.kv_blocks = 0
                 req.parked = False
             else:
@@ -823,9 +1014,17 @@ class ContinuousBatchingEngine:
         same round's replenish and the next live ticket is re-granted in
         FCFS order (the megastep does the identical thing in-graph)."""
         now = self._clock()
-        for slot, req in list(self.active.items()):
-            if req.deadline is not None and req.deadline <= now:
-                self._finish(slot, "deadline")
+        due = [slot for slot, req in self.active.items()
+               if req.deadline is not None and req.deadline <= now]
+        if self._kv_share:
+            # the device preempt phase decrefs every preempted slot's row
+            # in ONE batched pool_release — mirror it on the replica, then
+            # let _finish retire the slots with nothing left to release
+            self._hshare_release(due)
+            for slot in due:
+                self.active[slot].kv_blocks = 0
+        for slot in due:
+            self._finish(slot, "deadline")
 
     def step(self, sample_fn: Callable[[np.ndarray], np.ndarray]) -> int:
         """One engine iteration: preempt expired → admit → prefill admitted
@@ -848,11 +1047,23 @@ class ContinuousBatchingEngine:
             self._round_gate_stalls = 0
             self._round_prefill_tokens = 0
             self._round_prefill_chunks = 0
+            self._round_prefix_hits = 0
+            self._round_cow_copies = 0
             self._round_nonfinite = self._nonfinite_sticky
             a0, e0, p0 = (self.stats.admitted, self.stats.expired,
                           self.stats.preempted)
             self._preempt_expired()
-            for req in self._admit_ready():
+            admitted = self._admit_ready()
+            if self._kv_share:
+                # block identities make slot NUMBERING semantic under
+                # sharing (a slot's take pulls ids off the free queue in
+                # slot order) — mirror the device `_assign_slots` exactly:
+                # FCFS-ordered admits onto ASCENDING free slots.  The
+                # non-sharing paths only track counters, where assignment
+                # order is unobservable.
+                admitted = sorted(admitted, key=lambda r: r.prio_key)
+                self.free_slots.sort(reverse=True)
+            for req in admitted:
                 slot = self.free_slots.pop()
                 req.slot = slot
                 req.admit_t = time.time()
@@ -866,6 +1077,31 @@ class ContinuousBatchingEngine:
                     # the last chunk lands (full KV available)
                     req.prefill_pos = 0
                     req.kv_blocks = 0
+                    if self._kv_share and req.share is not None:
+                        # attach the gate's cache hit: seed the shared
+                        # block ids into the slot's table row and incref
+                        # each (no counter moves, no pokes — the device
+                        # round's phase 3a); the KV cursor resumes AT the
+                        # divergence point, so the covered tokens cost
+                        # zero prefill flops and zero new HBM
+                        c_i, bids_i, tail_i, cov_i = req.share
+                        req.share = None
+                        ids = [int(b) for b in bids_i[:c_i]]
+                        if tail_i >= 0:
+                            ids.append(tail_i)
+                        ids = ids[:self._kv_mb]
+                        if ids:
+                            self._kv_htbl[slot, :len(ids)] = ids
+                            self._kv_hpool = pool_incref(
+                                self._kv_hpool,
+                                jnp.asarray(ids, jnp.int32),
+                                jnp.ones(len(ids), bool))
+                            self._hshare_sync()
+                        req.prefill_pos = cov_i
+                        req.kv_blocks = len(ids)
+                        pl = min(len(req.prompt), self._prompt_cap) or 1
+                        if cov_i >= pl:  # fully covered: decode-ready now
+                            self._round_prefix_hits += 1
                 else:
                     self.prefill_fn(req)  # engine-owner fills the row's cache
 
@@ -896,8 +1132,17 @@ class ContinuousBatchingEngine:
                     req.last_tok_clock = now_r
                     if len(req.out_tokens) >= req.max_new_tokens:
                         done_slots.append(slot)
+                if self._kv_share:
+                    # ONE batched decref for the whole finish phase (the
+                    # device round's completion release) before the
+                    # per-slot retirement bookkeeping
+                    self._hshare_release(done_slots)
+                    for slot in done_slots:
+                        self.active[slot].kv_blocks = 0
                 for slot in done_slots:
                     self._finish(slot, "length")
+            self.stats.prefix_hits += self._round_prefix_hits
+            self.stats.cow_copies += self._round_cow_copies
             self._round_no = rnd + 1
             self._record_round(self._host_sample(rnd, now_r, a0, e0, p0,
                                                  len(decode)))
@@ -917,6 +1162,7 @@ class ContinuousBatchingEngine:
         from .prefill import banker_order, chunk_plan
 
         S = self.n_slots
+        sharing = self._kv_share
         busy = np.zeros(S, bool)
         parked = np.zeros(S, bool)
         woken = np.zeros(S, bool)
@@ -941,26 +1187,64 @@ class ContinuousBatchingEngine:
             rem[s] = self._kv_rem(r)
             prio_r[s] = r.admit_round
             prio_k[s] = r.prio_key
+        if sharing:
+            cow_a, held_free = self._kv_share_state()
+            rem = rem + cow_a.astype(np.int32)  # a pending COW owes 1 more
+        else:
+            cow_a, held_free = np.zeros(S, bool), held
         order = banker_order(rem, prio_r, prio_k, busy)
         plan = chunk_plan(order, busy, parked, woken, pos, plen, mxn, held,
-                          self._kv_free_blocks, chunk=self._chunk,
-                          budget=self._budget, block_size=self._kv_bs)
+                          self._kv_free_blocks, cow_a, held_free,
+                          chunk=self._chunk, budget=self._budget,
+                          block_size=self._kv_bs)
         take = np.asarray(plan.take)
         tokens = np.asarray(plan.tokens)
         parked_o = np.asarray(plan.parked)
         deficit = np.asarray(plan.deficit)
         newly = parked_o & (deficit > 0)
-        if newly.any():
-            bkt, sq = park_state(self._kv_sema,
-                                 np.maximum(deficit, 1).astype(np.uint32))
-            bkt, sq = np.asarray(bkt), np.asarray(sq)
-        total = int(take.sum())
-        self._kv_free_blocks -= total
-        self._kv_sema = self._kv_sema._replace(
-            ticket=self._kv_sema.ticket + jnp.uint32(total))
+        if sharing:
+            # the replica takes the granted blocks through the SAME
+            # `pool_try_alloc` the scanned round uses (free-queue cursor,
+            # park registration), scatters the fresh ids into the table —
+            # a COW grant REPLACES the shared tail at column held−1, whose
+            # old id is decref'd in ONE batched release — and resyncs the
+            # counter mirrors off the mutated pool
+            cow_g = np.asarray(plan.cow)
+            max_take = -(-self._chunk // self._kv_bs) + 1
+            hp, ids, bkt_j, sq_j = pool_try_alloc(
+                self._kv_hpool, plan.take, max_take,
+                park=jnp.asarray(newly), deficit=plan.deficit)
+            ids = np.asarray(ids)
+            bkt, sq = np.asarray(bkt_j), np.asarray(sq_j)
+            old = self._kv_htbl[np.arange(S),
+                                np.clip(held - 1, 0, self._kv_mb - 1)]
+            base = np.where(cow_g, held - 1, held)
+            for s in range(S):
+                for k in range(int(take[s])):
+                    if 0 <= base[s] + k < self._kv_mb:
+                        self._kv_htbl[s, base[s] + k] = ids[s, k]
+            if cow_g.any():
+                hp = pool_release(hp, jnp.asarray(old),
+                                  jnp.asarray(cow_g))
+            self._kv_hpool = hp
+            self._hshare_sync()
+            self._round_cow_copies = int(cow_g.sum())
+        else:
+            if newly.any():
+                bkt, sq = park_state(self._kv_sema,
+                                     np.maximum(deficit, 1)
+                                     .astype(np.uint32))
+                bkt, sq = np.asarray(bkt), np.asarray(sq)
+            total = int(take.sum())
+            self._kv_free_blocks -= total
+            self._kv_sema = self._kv_sema._replace(
+                ticket=self._kv_sema.ticket + jnp.uint32(total))
         for s, r in self.active.items():
             pl = int(plen[s])
-            r.kv_blocks += int(take[s])
+            if sharing:
+                r.kv_blocks = int((self._kv_htbl[s] >= 0).sum())
+            else:
+                r.kv_blocks += int(take[s])
             r.parked = bool(parked_o[s])
             if newly[s]:
                 r.park_bucket = int(bkt[s])
@@ -970,6 +1254,19 @@ class ContinuousBatchingEngine:
                 r.last_adv_round = self._round_no  # chunk landed: progress
                 if r.prefill_pos >= pl:
                     self.prefill_fn(r)  # last chunk landed: full KV ready
+        if sharing:
+            # publish prefixes at prefill COMPLETION — the device round's
+            # phase 4b, against the post-take post-COW pool/table (no pool
+            # op intervenes between here and there on either path)
+            comp = busy & (pos < plen) & (pos + tokens >= plen)
+            if comp.any():
+                sph = np.zeros((S, 2, self._hash_w + 1), np.uint32)
+                for s, r in self.active.items():
+                    sph[s] = np.asarray(r.ph, np.uint32)
+                self._kv_cache = cache_register(
+                    self._kv_cache, self._kv_hpool, jnp.asarray(sph),
+                    jnp.asarray(plen), jnp.asarray(self._kv_htbl),
+                    jnp.asarray(comp), self._kv_bs)
         self.stats.prefill_chunks += int((tokens > 0).sum())
         self.stats.kv_block_stalls += int(parked_o.sum())
         self._round_prefill_tokens = int(tokens.sum())
@@ -1019,6 +1316,7 @@ class ContinuousBatchingEngine:
         after the last round.
         """
         from .engine_state import (
+            KVPool,
             Slots,
             fused_round_impl,
             make_engine_state,
@@ -1080,10 +1378,12 @@ class ContinuousBatchingEngine:
                     "paged engine has host-admitted active slots; serve a "
                     "kv_pool engine exclusively via megastep")
             fresh_kv = paged and self._kv_state is None
+            sharing = self._kv_share
             state = make_engine_state(
                 self.qos, S, B, P, free_units=self._qos_free,
-                kv_blocks=self._kv_blocks if fresh_kv else 0,
-                kv_slot_blocks=self._kv_mb if fresh_kv else 0,
+                kv_blocks=self._kv_blocks if fresh_kv and not sharing else 0,
+                kv_slot_blocks=self._kv_mb if fresh_kv and not sharing
+                else 0,
                 # in-scan telemetry ring: pow2 ≥ K so one launch never
                 # wraps (pow2 also buckets the compile cache with K)
                 ring_cap=_next_pow2(K))
@@ -1093,6 +1393,14 @@ class ContinuousBatchingEngine:
                 # building a throwaway fresh pool first would waste an
                 # (S, MB) table + NB-entry queue allocation per launch
                 state = state._replace(kv=self._kv_state)
+            elif paged and sharing:
+                # first launch under sharing ADOPTS the host replica —
+                # pool generations and cache entries accumulated by prior
+                # host step() rounds stay authoritative, and the carried
+                # pool below replaces the replica after the scan
+                state = state._replace(kv=KVPool(
+                    pool=self._kv_hpool, tbl=jnp.asarray(self._kv_htbl),
+                    cache=self._kv_cache))
             valid = np.zeros(B, bool)
             ids = np.zeros(B, np.int32)
             tks = np.zeros(B, np.uint32)
@@ -1101,6 +1409,9 @@ class ContinuousBatchingEngine:
             mx = np.zeros(B, np.int32)
             pl = np.zeros(B, np.int32)
             pr = np.zeros((B, P), np.int32)
+            if sharing:
+                bph = np.zeros((B, 2, self._hash_w + 1), np.uint32)
+                sph = np.zeros((S, 2, self._hash_w + 1), np.uint32)
             for i, r in enumerate(rows):
                 valid[i] = True
                 ids[i] = self._tindex[r.tenant_id]
@@ -1112,6 +1423,8 @@ class ContinuousBatchingEngine:
                 p = r.prompt[-P:] if r.prompt else [0]
                 pl[i] = len(p)
                 pr[i, :len(p)] = p
+                if sharing:
+                    bph[i] = np.asarray(r.ph, np.uint32)
             sb = np.zeros(S, bool)
             srow = np.full(S, -1, np.int32)
             srid = np.full(S, -1, np.int32)
@@ -1164,6 +1477,8 @@ class ContinuousBatchingEngine:
                     sprk[slot] = r.parked
                     spb[slot] = r.park_bucket
                     sps[slot] = r.park_seq
+                    if sharing:
+                        sph[slot] = np.asarray(r.ph, np.uint32)
                 else:
                     spos[slot] = plen_t + len(r.out_tokens)
             state = state._replace(
@@ -1174,7 +1489,8 @@ class ContinuousBatchingEngine:
                     valid=jnp.asarray(valid), tenant=jnp.asarray(ids),
                     ticket=jnp.asarray(tks), deadline=jnp.asarray(dls),
                     rid=jnp.asarray(rid), max_new=jnp.asarray(mx),
-                    prompt=jnp.asarray(pr), prompt_len=jnp.asarray(pl)),
+                    prompt=jnp.asarray(pr), prompt_len=jnp.asarray(pl),
+                    **({"ph": jnp.asarray(bph)} if sharing else {})),
                 slots=Slots(
                     busy=jnp.asarray(sb), row=jnp.asarray(srow),
                     rid=jnp.asarray(srid), tenant=jnp.asarray(sten),
@@ -1185,7 +1501,10 @@ class ContinuousBatchingEngine:
                     prio_k=jnp.asarray(spri_k), parked=jnp.asarray(sprk),
                     park_bucket=jnp.asarray(spb), park_seq=jnp.asarray(sps),
                     chunk=jnp.zeros(S, jnp.int32),
-                    last_adv=jnp.asarray(sladv)),
+                    last_adv=jnp.asarray(sladv),
+                    **({"ph": jnp.asarray(sph),
+                        "cow_src": jnp.full((S,), -1, jnp.int32)}
+                       if sharing else {})),
                 slot_sema=state.slot_sema._replace(
                     ticket=jnp.uint32(int(sb.sum()))))
 
@@ -1323,6 +1642,15 @@ class ContinuousBatchingEngine:
                 # serving raises above, but the mirror must never be
                 # allowed to go stale against carried park state
                 self._kv_sema = st.kv.pool.sema
+                if sharing:
+                    # replica ← post-scan device pool/table/cache (one
+                    # object: the next host step() or launch continues
+                    # from the scanned state); refcnt mirror off the SAME
+                    # device_get so telemetry() stays sync-free
+                    self._kv_hpool = st.kv.pool
+                    self._kv_cache = st.kv.cache
+                    self._kv_htbl = np.asarray(st_h.kv.tbl)
+                    self._kv_refcnt_h = np.asarray(st_h.kv.pool.refcnt)
             if chunked:
                 # carry each still-running request's prefill/park state to
                 # the next launch (the device pool itself persists in
@@ -1343,6 +1671,11 @@ class ContinuousBatchingEngine:
             from .engine_state import ring_samples
 
             self._last_samples = ring_samples(st_h.ring, t0=t0)
+            if sharing:
+                self.stats.prefix_hits += sum(
+                    s["prefix_hits"] for s in self._last_samples)
+                self.stats.cow_copies += sum(
+                    s["cow_copies"] for s in self._last_samples)
             if self._obs is not None:
                 for smp in self._last_samples:
                     self._obs.record_round(smp)
@@ -1385,6 +1718,18 @@ class ContinuousBatchingEngine:
                     self._kv_free_blocks = int(np.int32(
                         np.uint32(pool.sema.grant)
                         - np.uint32(pool.sema.ticket)))
+                    if self._kv_share:
+                        # replica follows the repaired device pool (the
+                        # release above decref'd shared references — only
+                        # last-sharer blocks actually re-entered the queue)
+                        self._kv_hpool = pool
+                        self._kv_htbl = np.asarray(self._kv_state.tbl)
+                        self._kv_refcnt_h = np.asarray(pool.refcnt)
+                elif self._kv_share:
+                    # host-loop sharing: ONE batched decref-release of the
+                    # slot's table row on the replica (frees + pokes only
+                    # blocks whose last sharer this slot was)
+                    self._hshare_release([slot])
                 elif self._chunk:
                     self._kv_free_blocks += req.kv_blocks
                     self._kv_sema = post_batch(self._kv_sema, req.kv_blocks)
@@ -1433,7 +1778,63 @@ class ContinuousBatchingEngine:
             NB = self._kv_blocks
             report = {"aliased": 0, "leaked": 0, "counter_drift": 0,
                       "victims": []}
-            if self._kv_state is not None:
+            if self._kv_share:
+                # refcounted rebuild: table REFERENCES are the ground
+                # truth — refcnt := per-block reference count, free =
+                # {refs == 0}, ticket = grant − free (grant preserved so
+                # the poke history parked slots observed stays valid).
+                # The weak prefix cache is dropped wholesale: no gen
+                # stamp can be trusted about rebuilt identities
+                # (`prefix.cache_clear`); future prefills re-register.
+                # Note "aliased" loses its one-owner meaning here — a
+                # block in two tables is a legitimate shared prefix —
+                # so only out-of-range ids evict their cell.
+                kv_dev = self._kv_state
+                tbl = np.asarray(kv_dev.tbl if kv_dev is not None
+                                 else self._kv_htbl).copy()
+                pool = kv_dev.pool if kv_dev is not None else self._kv_hpool
+                Sn, MB = tbl.shape
+                refs = np.zeros(NB, np.int64)
+                for s in range(Sn):
+                    for j in range(MB):
+                        b = tbl[s, j]
+                        if b < 0:
+                            continue
+                        if b >= NB:
+                            tbl[s, j] = -1
+                            report["aliased"] += 1
+                            if s not in report["victims"]:
+                                report["victims"].append(s)
+                        else:
+                            refs[b] += 1
+                free_ids = np.flatnonzero(refs == 0).astype(np.int32)
+                n_free = len(free_ids)
+                sema = pool.sema
+                drift = n_free - int(np.int32(np.uint32(sema.grant)
+                                              - np.uint32(sema.ticket)))
+                report["counter_drift"] = int(drift)
+                report["leaked"] = max(0, int(drift))
+                report["refcnt_drift"] = int(
+                    np.abs(refs - np.asarray(pool.refcnt)).sum())
+                new_ticket = np.uint32(int(np.uint32(sema.grant)) - n_free)
+                q = np.asarray(pool.free_q).copy()
+                pos = (int(new_ticket) + np.arange(n_free)) & (NB - 1)
+                q[pos] = free_ids
+                new_pool = pool._replace(
+                    sema=sema._replace(ticket=jnp.uint32(new_ticket)),
+                    free_q=jnp.asarray(q),
+                    refcnt=jnp.asarray(refs, jnp.int32))
+                self._kv_cache = cache_clear(self._kv_cache)
+                self._kv_hpool = new_pool
+                self._kv_htbl = tbl
+                if kv_dev is not None:
+                    self._kv_state = kv_dev._replace(
+                        pool=new_pool, tbl=jnp.asarray(tbl),
+                        cache=self._kv_cache)
+                self._hshare_sync()
+                for s, r in self.active.items():
+                    r.kv_blocks = int((tbl[s] >= 0).sum())
+            elif self._kv_state is not None:
                 kv = self._kv_state
                 tbl = np.asarray(kv.tbl).copy()
                 S, MB = tbl.shape
@@ -1544,7 +1945,13 @@ class ContinuousBatchingEngine:
         # sentinel checks (serving.sentinels; megastep emits the same
         # field from `round_health` over the post-round device state)
         if self._chunk:
-            kv_held = sum(r.kv_blocks for r in self.active.values())
+            if self._kv_share:
+                # shared blocks are held ONCE — the refcount support is
+                # the allocated set (conservation: free + live = NB), not
+                # the per-slot table counts, which over-count sharers
+                kv_held = int((self._kv_refcnt_h > 0).sum())
+            else:
+                kv_held = sum(r.kv_blocks for r in self.active.values())
         elif paged:
             kv_held = sum(self._kv_demand(r) for r in self.active.values())
         else:
@@ -1556,7 +1963,9 @@ class ContinuousBatchingEngine:
             kv_held=kv_held,
             kv_blocks=self._kv_blocks if paged else 0,
             chunked=self._chunk > 0,
-            headroom=self._kv_headroom() if self._chunk else 0,
+            headroom=(self._kv_headroom(
+                share=self._kv_share_state() if self._kv_share else None)
+                if self._chunk else 0),
             stuck=(self._watchdog > 0 and any(
                 rnd - r.last_adv_round >= self._watchdog
                 for r in self.active.values())),
@@ -1580,6 +1989,10 @@ class ContinuousBatchingEngine:
             "kv_free": int(self._kv_free_blocks) if paged else 0,
             "kv_pokes": (int(np.sum(np.asarray(self._kv_sema.bucket_seq),
                                     dtype=np.uint32)) if paged else 0),
+            "prefix_hits": self._round_prefix_hits,
+            "blocks_shared": (int((self._kv_refcnt_h >= 2).sum())
+                              if self._kv_share else 0),
+            "cow_copies": self._round_cow_copies,
             "health": int(health),
             "credit": [int(c) for c in credit],
             "poke_dead": [int(d) for d in dead],
@@ -1646,6 +2059,17 @@ class ContinuousBatchingEngine:
                        else plen + len(r.out_tokens))
                 written += -(-cur // self._kv_bs) if cur else 0
             tel["pool_utilization"] = written / self._kv_blocks
+            if self._kv_share:
+                # under sharing the per-request sum above counts a shared
+                # block once per SHARER — the refcount support is the
+                # unique allocated set.  Read off the np refcnt mirror
+                # (updated by _hshare_sync / the megastep carry), never
+                # the device pool: the no-sync contract holds.
+                live = int((self._kv_refcnt_h > 0).sum())
+                tel["pool_utilization"] = live / self._kv_blocks
+                tel["blocks_shared"] = int((self._kv_refcnt_h >= 2).sum())
+                tel["prefix_hits"] = self.stats.prefix_hits
+                tel["cow_copies"] = self.stats.cow_copies
             tel["kv_block_stalls"] = self.stats.kv_block_stalls
             tel["prefill_chunks"] = self.stats.prefill_chunks
             tel["parked_slots"] = sum(r.parked for r in self.active.values())

@@ -101,10 +101,21 @@ def _bit(cond, bit):
 
 
 def kv_partition_violated(kv) -> jax.Array:
-    """Ground-truth partition audit of the block pool (bool scalar): the
-    free-queue region ``free_q[ticket..grant)`` and the live block-table
-    entries must together cover every block id exactly once.  O(NB + S·MB)
-    — a bincount, cheap enough to run every scanned round."""
+    """Ground-truth partition audit of the block pool (bool scalar), in
+    its refcounted generalization (PR 9):
+
+        {free_q[ticket..grant)} ∪ {blocks with refcnt > 0} = {0..NB−1}
+        per-block table references == refcnt
+
+    With no sharing every refcount is 0 or 1 and table refs == refcnt
+    pins each live block to exactly ONE table entry — the PR-4 one-owner
+    partition as a special case; so the generalized audit replaces it
+    unconditionally.  A double-release (refcnt untouched, id re-enqueued
+    — `resilience.faults`) puts an id both free and live (sum 2); a
+    decref of a never-held reference drives refcnt negative (≠ the
+    non-negative table count); aliasing one private block into two
+    tables breaks the reference equality.  O(NB + S·MB) — bincounts,
+    cheap enough to run every scanned round."""
     NB = kv.pool.free_q.shape[0]
     free_n = pool_free_count(kv.pool)
     bad = (free_n < 0) | (free_n > NB)
@@ -120,8 +131,11 @@ def kv_partition_violated(kv) -> jax.Array:
     tid = kv.tbl.reshape(-1)
     ok_t = (tid >= 0) & (tid < NB)
     bad |= jnp.any(tid >= NB)                       # table id out of range
-    cnt = cnt.at[jnp.where(ok_t, tid, 0)].add(ok_t.astype(jnp.int32))
-    return bad | jnp.any(cnt != 1)
+    refs = jnp.zeros((NB,), jnp.int32).at[
+        jnp.where(ok_t, tid, 0)].add(ok_t.astype(jnp.int32))
+    live = (kv.pool.refcnt > 0).astype(jnp.int32)
+    return (bad | jnp.any(cnt + live != 1)          # partition broken
+            | jnp.any(refs != kv.pool.refcnt))      # refs ≠ refcnt
 
 
 def model_nonfinite(model) -> jax.Array:
@@ -148,18 +162,34 @@ def round_health(state, model, round_no, *, block_size: int = 0,
     h |= _bit(jnp.any(_sdist(state.qos.grant, state.qos.consumed) < 0),
               H_CREDIT_NEG)
     if state.kv is not None:
-        held = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32))
+        sharing = state.kv.cache is not None
         NB = state.kv.pool.free_q.shape[0]
+        if sharing:
+            # refcounted conservation: free + live (refcnt > 0) = NB —
+            # held table entries over-count shared blocks, the refcount
+            # support is the real allocated set
+            held = jnp.sum((state.kv.pool.refcnt > 0).astype(jnp.int32))
+        else:
+            held = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32))
         h |= _bit(pool_free_count(state.kv.pool) + held != NB,
                   H_KV_CONSERVE)
         h |= _bit(kv_partition_violated(state.kv), H_KV_PARTITION)
         if chunked:
             held_s = jnp.sum((state.kv.tbl >= 0).astype(jnp.int32), axis=1)
-            from .engine_state import _slot_rem  # avoid import cycle
+            from .engine_state import _share_flags, _slot_rem  # no cycle
 
             rem = _slot_rem(sl, held_s, block_size)
+            cover = held_s
+            if sharing:
+                # a pending copy-on-write still owes one block; only
+                # privately-held blocks fund the Banker cover
+                cow, held_free = _share_flags(
+                    state.kv.tbl, state.kv.pool.refcnt, sl.busy, sl.pos,
+                    sl.plen, held_s, block_size)
+                rem = rem + jnp.where(cow, 1, 0)
+                cover = held_free
             need = block_headroom(
-                rem, held_s,
+                rem, cover,
                 banker_order(rem, sl.prio_r, sl.prio_k, sl.busy), sl.busy)
             h |= _bit(need > pool_free_count(state.kv.pool), H_BANKER)
     if watchdog > 0:

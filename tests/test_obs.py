@@ -53,6 +53,9 @@ _SAMPLE_KEYS = {
     "prefill_tokens", "prefill_chunks", "prefill_pending", "gate_stalls",
     "parked", "backlog", "active", "slot_free", "kv_free", "kv_pokes",
     "health", "credit", "poke_dead", "kv_wait_hist",
+    # PR 9 sharing gauges — zero on non-sharing engines, still mirrored
+    # bit-identically host step() vs megastep ring
+    "prefix_hits", "blocks_shared", "cow_copies",
 }
 
 _CLOCK_FIELDS = ("submit_clock", "first_tok_clock", "last_tok_clock",
