@@ -204,6 +204,43 @@ def run(metrics: dict | None = None) -> str:
         metrics["qos_rank_flops"] = {
             "n": N4, "s": S4, "blocked": fl_new, "pairwise": fl_old,
             "ratio": fl_old / max(fl_new, 1.0)}
+
+    # per-kernel cost-analysis profile: XLA's own flops / bytes-accessed
+    # view of each serving kernel's compiled module (interpret mode lowers
+    # to plain HLO, so the numbers are the reference-path cost — the
+    # groundwork for the ROADMAP item-2 TPU roofline validation).  Some
+    # backends report no cost model: rows degrade to zeros, never fail.
+    from repro.kernels.paged_decode import paged_decode
+
+    def _profile(name, fn, *args):
+        try:
+            ca = compat.cost_analysis(jax.jit(fn).lower(*args).compile())
+        except Exception as e:  # pragma: no cover - backend-specific
+            lines.append(f"profile {name}: cost analysis unavailable ({e})")
+            ca = {}
+        flops = float(ca.get("flops", 0.0))
+        byt = float(ca.get("bytes accessed", 0.0))
+        ai = flops / byt if byt else float("nan")
+        lines.append(f"profile {name}: {flops:.3g} flops, {byt:.3g} B "
+                     f"accessed, AI={ai:.2f} flop/B")
+        if metrics is not None:
+            metrics.setdefault("kernel_profile", {})[name] = {
+                "flops": flops, "bytes": byt}
+
+    _profile("qos_round_fused",
+             lambda st, i, t, a, d: qos_round_fused(
+                 st, i, t, a, d, 1.0, 24, max_units=MU, block_n=BN,
+                 interpret=True),
+             qs, ids, tk, alive, dls)
+    pd_q = jax.random.normal(key, (tbl.shape[0], H, hd), jnp.float32)
+    pd_lens = jnp.asarray([32, 17, 9, 0], jnp.int32)
+    _profile("paged_decode",
+             lambda q_, kp_, vp_, t_, l_: paged_decode(
+                 q_, kp_, vp_, t_, l_, interpret=True),
+             pd_q, kpool, vpool, tbl, pd_lens)
+    _profile("paged_prefill",
+             lambda *a: paged_prefill(*a, interpret=True),
+             qp_, kc, vc, kpool, vpool, tbl, offs, lens)
     return "\n".join(lines)
 
 

@@ -1,0 +1,146 @@
+"""Bench-trajectory regression gate.
+
+Every PR commits a full-size ``BENCH_PR<k>.json`` snapshot (see
+``benchmarks/run.py --json``).  This module walks that committed
+trajectory and fails if any throughput metric in the NEWEST snapshot
+regressed by more than ``--threshold`` (default 20%) against the most
+recent earlier snapshot that reports the same metric.
+
+    PYTHONPATH=src python -m benchmarks.regression            # newest vs rest
+    PYTHONPATH=src python -m benchmarks.regression BENCH_PR10.json
+    PYTHONPATH=src python -m benchmarks.regression --threshold 0.3
+
+Throughput metrics are discovered structurally: any numeric leaf whose
+key is ``tok_s`` or ``tok_per_vs`` (cluster tokens per virtual second),
+anywhere under ``sections``.  Metrics that appear for the first time in
+the newest snapshot are reported as new, never failed.
+
+Snapshots are produced on whatever machine ran that PR's session, so
+absolute tokens/s is only comparable over SHORT spans of the
+trajectory: the gate compares against the ``--window`` most recent
+earlier snapshots (default 1 — one hardware hop), taking each metric's
+most recent prior value inside the window.  Older history still prints
+(``--window 0`` = whole trajectory) but reading a 20% "regression"
+across a machine change is noise, not signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+THROUGHPUT_KEYS = ("tok_s", "tok_per_vs")
+
+
+def _snapshot_order(path: str) -> int:
+    m = re.search(r"BENCH_PR(\d+)\.json$", os.path.basename(path))
+    return int(m.group(1)) if m else -1
+
+
+def discover(root: str = ".") -> list[str]:
+    """Committed trajectory snapshots, oldest first."""
+    paths = [p for p in glob.glob(os.path.join(root, "BENCH_PR*.json"))
+             if _snapshot_order(p) >= 0]
+    return sorted(paths, key=_snapshot_order)
+
+
+def throughput_metrics(report: dict) -> dict[str, float]:
+    """Flatten ``sections`` to {'section/.../tok_s': value}."""
+    out: dict[str, float] = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{prefix}/{k}" if prefix else str(k))
+        elif isinstance(node, (int, float)) and not isinstance(node, bool):
+            if prefix.rsplit("/", 1)[-1] in THROUGHPUT_KEYS:
+                out[prefix] = float(node)
+
+    walk(report.get("sections", {}), "")
+    return out
+
+
+def compare(new_path: str, baseline_paths: list[str], threshold: float):
+    """Return (failures, lines) for new vs the trajectory baselines."""
+    with open(new_path) as f:
+        new = throughput_metrics(json.load(f))
+    # Most recent earlier value per metric: apply baselines oldest→newest.
+    base: dict[str, tuple[float, str]] = {}
+    for p in baseline_paths:
+        with open(p) as f:
+            for k, v in throughput_metrics(json.load(f)).items():
+                base[k] = (v, os.path.basename(p))
+    failures, lines = [], []
+    for k in sorted(new):
+        if k not in base:
+            lines.append(f"  NEW    {k} = {new[k]:.1f}")
+            continue
+        old, src = base[k]
+        if old <= 0:
+            continue
+        ratio = new[k] / old
+        tag = "ok"
+        if ratio < 1.0 - threshold:
+            tag = "FAIL"
+            failures.append(k)
+        lines.append(f"  {tag:<6} {k}: {old:.1f} ({src}) -> "
+                     f"{new[k]:.1f}  ({(ratio - 1.0) * 100:+.1f}%)")
+    for k in sorted(set(base) - set(new)):
+        lines.append(f"  GONE   {k} (was in {base[k][1]}) — not failed, "
+                     f"but trajectory lost a metric")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", nargs="?", default=None,
+                    help="snapshot to gate (default: newest BENCH_PR*.json)")
+    ap.add_argument("--root", default=".",
+                    help="directory holding BENCH_PR*.json (default: .)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed fractional tokens/s drop (default 0.20)")
+    ap.add_argument("--window", type=int, default=1,
+                    help="gate vs the N most recent earlier snapshots "
+                         "(0 = whole trajectory; default 1)")
+    args = ap.parse_args(argv)
+
+    traj = discover(args.root)
+    if args.new is None:
+        if not traj:
+            print("[bench-regression] no BENCH_PR*.json trajectory found")
+            return 1
+        new_path, baselines = traj[-1], traj[:-1]
+    else:
+        new_path = args.new
+        baselines = [p for p in traj
+                     if os.path.abspath(p) != os.path.abspath(new_path)]
+        order = _snapshot_order(new_path)
+        if order >= 0:
+            baselines = [p for p in baselines if _snapshot_order(p) < order]
+    if not baselines:
+        print(f"[bench-regression] {new_path}: no earlier snapshots — pass")
+        return 0
+    if args.window > 0:
+        baselines = baselines[-args.window:]
+
+    failures, lines = compare(new_path, baselines, args.threshold)
+    print(f"[bench-regression] {os.path.basename(new_path)} vs "
+          f"{len(baselines)} earlier snapshot(s), "
+          f"threshold -{args.threshold * 100:.0f}%")
+    print("\n".join(lines))
+    if failures:
+        print(f"[bench-regression] FAIL: {len(failures)} metric(s) regressed "
+              f"more than {args.threshold * 100:.0f}%:")
+        for k in failures:
+            print(f"  {k}")
+        return 1
+    print("[bench-regression] pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -735,6 +735,7 @@ def run_cluster(metrics: dict | None = None) -> list[str]:
     mid-megastep — the cost of detection + exactly-once migration is a
     TTFT tail and a modest throughput dip, never a lost or doubled
     request."""
+    from repro.obs import EngineObs, FlightRecorder, aggregate
     from repro.resilience.faults import REPLICA_KILL, FaultEvent, FaultPlan
     from repro.serving.router import toy_cluster, toy_workload
 
@@ -748,7 +749,11 @@ def run_cluster(metrics: dict | None = None) -> list[str]:
             ("1 killed", FaultPlan(seed=0, events=(
                 FaultEvent(round=2, kind=REPLICA_KILL, arg=1, delta=2),))),
     ):
-        r = toy_cluster(4, seed=0, plan=plan, capacity=4)
+        # one recorder + flight window per replica: the fleet aggregator
+        # and the dead replica's post-mortem bundle both need them
+        r = toy_cluster(4, seed=0, plan=plan, capacity=4,
+                        obs=lambda: EngineObs(
+                            flight=FlightRecorder(capacity=16)))
         r.submit_batch(toy_workload(n_req, seed=9))
         t0 = time.perf_counter()
         rep = r.run(max_rounds=300)
@@ -764,14 +769,45 @@ def run_cluster(metrics: dict | None = None) -> list[str]:
         lines.append(f"{name:>12} {st['completed']:>5} {len(rep['shed']):>5} "
                      f"{rep['rounds']:>7} {toks / vt:>9.1f} {p99:>9.2f} "
                      f"{st['migrated']:>5} {wall:>7.2f}")
-        out[name.replace(" ", "_").replace("-", "_")] = {
+        key = name.replace(" ", "_").replace("-", "_")
+        out[key] = {
             "completed": st["completed"], "shed": len(rep["shed"]),
             "rounds": rep["rounds"], "tok_per_vs": round(toks / vt, 2),
             "p99_ttft": round(p99, 3), "migrated": st["migrated"],
             "wall_s": round(wall, 3)}
+
+        # PR 10: fleet SLO aggregation + per-replica lease headroom +
+        # migration latency + stitched-span accounting off the trace
+        fab = r.fabric_telemetry()
+        fleet = aggregate([rp.eng._obs for rp in r.replicas], router=fab)
+        spans = r.cluster_spans()
+        migrated_spans = sum(1 for s in spans.values()
+                             if s["migrations"] > 0)
+        bundles = sum(len(rp.eng._obs.flight.bundles)
+                      for rp in r.replicas)
+        c = fleet["cluster"]
+        mlat = fab["migration_latency"]
+        lines.append(
+            f"{'':>12} fleet ttft p50/p99={c['ttft']['p50']:.2f}/"
+            f"{c['ttft']['p99']:.2f} tpot p50={c['tpot']['p50']:.2f} "
+            f"spans={len(spans)} migrated_spans={migrated_spans} "
+            f"mig_lat p50={mlat['p50'] if mlat['count'] else 0:.2f} "
+            f"flight_bundles={bundles}")
+        out[key]["fleet"] = {
+            "ttft_p50": c["ttft"]["p50"], "ttft_p99": c["ttft"]["p99"],
+            "tpot_p50": c["tpot"]["p50"],
+            "attainment": c["attainment"],
+            "lease_headroom": {str(i): v["headroom"]
+                               for i, v in fab["leases"].items()},
+            "migration_latency_p50": (mlat["p50"] if mlat["count"]
+                                      else None),
+            "spans": len(spans), "migrated_spans": migrated_spans,
+            "flight_bundles": bundles}
     lines.append("→ virtual-time tokens/s and the TTFT tail absorb the "
                  "detection TTL + migration backoff; the lease audit stays "
-                 "clean in both scenarios (no unit lost with the replica)")
+                 "clean in both scenarios (no unit lost with the replica); "
+                 "every request leaves ONE stitched span and a dead "
+                 "replica leaves a flight bundle")
     if metrics is not None:
         metrics["cluster"] = out
     return lines

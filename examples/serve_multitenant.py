@@ -308,7 +308,8 @@ def main_chaos(seed: int = 0, K: int = 8, trace: bool = False) -> None:
               "injected faults, exit audit clean)")
 
 
-def main_cluster(seed: int = 0, trace: bool = False) -> None:
+def main_cluster(seed: int = 0, trace: bool = False,
+                 perfetto: str | None = None) -> None:
     """Fault-tolerant multi-engine fabric (``--cluster [seed]``): four
     replica engines behind `repro.serving.router.ReplicaRouter` — each
     replica's in-flight capacity a cluster-level `DistributedTicketLease`
@@ -368,6 +369,31 @@ def main_cluster(seed: int = 0, trace: bool = False) -> None:
             for k, v in rep.eng.telemetry()["recovery"].items():
                 recovery[k] = recovery.get(k, 0) + v
     _finish_trace(obs, trace_path, recovery)
+    # PR 10: stitched cluster spans + fleet aggregation + Perfetto export
+    from repro.obs import aggregate, render_cluster_table, write_perfetto
+
+    spans = router.cluster_spans()
+    migrated = sum(1 for s in spans.values() if s["migrations"] > 0)
+    print(f"[trace] {len(spans)} stitched spans "
+          f"({migrated} with a migration segment, "
+          f"{sum(s['duplicates_suppressed'] for s in spans.values())} "
+          f"duplicate terminals suppressed)")
+    # toy_cluster may share ONE recorder across replicas — dedupe so the
+    # fleet reduction doesn't count the same accumulator four times
+    seen: set[int] = set()
+    per_rep = []
+    for rep in router.replicas:
+        o = rep.eng._obs
+        if o is not None and id(o) not in seen:
+            seen.add(id(o))
+            per_rep.append(o)
+    if per_rep:
+        print(render_cluster_table(
+            aggregate(per_rep, router=router.fabric_telemetry())))
+    if perfetto:
+        write_perfetto(perfetto, spans)
+        print(f"[trace] Chrome-trace JSON written to {perfetto} "
+              f"(load in chrome://tracing or ui.perfetto.dev)")
     print("[example] replica router + reaper + exactly-once migration OK "
           f"({st['replicas_dead']} replicas died, "
           f"{st['successors']} warm successors, streams bit-identical)")
@@ -440,8 +466,13 @@ if __name__ == "__main__":
                    trace=trace)
     elif "--cluster" in sys.argv[1:]:
         rest = sys.argv[sys.argv.index("--cluster") + 1:]
+        pf = None
+        if "--perfetto" in sys.argv[1:]:
+            after = sys.argv[sys.argv.index("--perfetto") + 1:]
+            pf = (after[0] if after and not after[0].startswith("--")
+                  else "trace_cluster.json")
         main_cluster(seed=int(rest[0]) if rest and rest[0].isdigit() else 0,
-                     trace=trace)
+                     trace=trace, perfetto=pf)
     elif "--paged" in sys.argv[1:]:
         main_paged(trace=trace)
     elif "--shared-prefix" in sys.argv[1:]:

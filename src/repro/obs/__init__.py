@@ -16,17 +16,28 @@ sample stream:
   tracking keyed on the engine's virtual ``clock=`` and SLO-attainment
   reporting, consumed by ``scheduler.telemetry()`` (the ``slo`` key),
   ``benchmarks/serving_bench.run_slo``, and
-  ``examples/serve_multitenant.py --trace``.
+  ``examples/serve_multitenant.py --trace``;
+* :class:`TraceBuffer` / :func:`build_spans` / :func:`to_perfetto`
+  (PR 10) — per-request span trees from the in-scan event table, with
+  Chrome-trace export and critical-path breakdowns;
+* :class:`FlightRecorder` (PR 10) — bounded pre-crash window that cuts a
+  post-mortem bundle on sentinel trips, recovery-ladder engagement, or a
+  replica reap;
+* :func:`aggregate` (PR 10) — cross-replica ``EngineObs`` reduction to
+  fleet-level p50/p99/p999 TTFT/TPOT and per-replica health.
 
 Everything here is plain Python/numpy — no jax imports, no device work:
 attaching an ``EngineObs`` never adds a host sync to either serving path.
 """
 
+from .cluster import aggregate, render_cluster_table
+from .flight import FlightRecorder
 from .hist import LogHistogram
 from .recorder import EngineObs
 from .sinks import CallbackSink, JsonlSink, StdoutSink
 from .slo import TenantSLO
 from .smooth import RollingMedian
+from .trace import TraceBuffer, build_spans, to_perfetto, write_perfetto
 
 __all__ = [
     "LogHistogram",
@@ -36,4 +47,11 @@ __all__ = [
     "CallbackSink",
     "TenantSLO",
     "EngineObs",
+    "TraceBuffer",
+    "build_spans",
+    "to_perfetto",
+    "write_perfetto",
+    "FlightRecorder",
+    "aggregate",
+    "render_cluster_table",
 ]

@@ -13,6 +13,7 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+from .flight import _health_flags
 from .slo import TenantSLO
 from .smooth import TraceSmoother
 
@@ -37,8 +38,10 @@ class EngineObs:
 
     def __init__(self, sinks=(), *, ttft_target: Optional[float] = None,
                  tpot_target: Optional[float] = None,
-                 smooth_window: int = 1, resolution: float = 0.01):
+                 smooth_window: int = 1, resolution: float = 0.01,
+                 flight=None):
         self.sinks = list(sinks)
+        self.flight = flight        # optional obs.flight.FlightRecorder
         self.ttft_target = ttft_target
         self.tpot_target = tpot_target
         self._resolution = resolution
@@ -65,10 +68,16 @@ class EngineObs:
         self.cow_copies += int(sample.get("cow_copies", 0))
         self.blocks_shared_peak = max(self.blocks_shared_peak,
                                       int(sample.get("blocks_shared", 0)))
+        if self.flight is not None:
+            self.flight.observe_round(sample)
         record = sample
-        if self._smoother is not None:
+        if self._smoother is not None or h:
             record = dict(sample)
-            record["smoothed"] = self._smoother.push(sample)
+            if self._smoother is not None:
+                record["smoothed"] = self._smoother.push(sample)
+            if h:
+                # named flags next to the raw mask wherever it surfaces
+                record["health_flags"] = _health_flags(h)
         for sink in self.sinks:
             sink.emit(record)
 
@@ -97,6 +106,7 @@ class EngineObs:
         return {
             "rounds": self.rounds,
             "health": {"mask": self.health_mask,
+                       "flags": _health_flags(self.health_mask),
                        "sick_rounds": self.sick_rounds},
             "retries": dict(sorted(self.tenant_retries.items())),
             "prefix": {"hits": self.prefix_hits,

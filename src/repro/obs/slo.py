@@ -74,6 +74,25 @@ class TenantSLO:
             if ok:
                 self.attained += 1
 
+    def merge(self, other: "TenantSLO") -> None:
+        """Fold another accumulator in (cluster aggregation: the SAME
+        tenant served by several replicas).  Targets must agree — a
+        cluster-level attainment number is meaningless across different
+        SLOs — and histogram resolutions are checked by
+        :meth:`LogHistogram.merge`."""
+        if (other.ttft_target != self.ttft_target
+                or other.tpot_target != self.tpot_target):
+            raise ValueError("can only merge TenantSLOs with identical "
+                             "targets")
+        self.ttft.merge(other.ttft)
+        self.tpot.merge(other.tpot)
+        self.submitted += other.submitted
+        self.finished += other.finished
+        self.expired += other.expired
+        self.preempted += other.preempted
+        self.attained += other.attained
+        self.tokens += other.tokens
+
     @property
     def attainment(self) -> float:
         return self.attained / self.submitted if self.submitted \

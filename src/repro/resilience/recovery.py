@@ -362,6 +362,13 @@ class ResilientEngine:
             return
         eng = self.engine
         self._log(boundary, "health", bits=sn.decode_health(h))
+        # flight recorder: the ladder engaging IS the post-mortem moment —
+        # cut a bundle before any rung mutates engine state
+        fl = getattr(getattr(eng, "_obs", None), "flight", None)
+        if fl is not None:
+            fl.dump("recovery_ladder",
+                    extra={"boundary": boundary, "mask": h,
+                           "flags": sn.decode_health(h)})
         if h & sn.H_STUCK:
             W = eng._watchdog
             last = boundary - 1  # the last executed round's watchdog view

@@ -343,6 +343,18 @@ class TelemetrySample(NamedTuple):
     credit: jax.Array           # (T,) i32 — per-tenant grant − consumed
     poke_dead: jax.Array        # (T,) u32 — per-tenant poke-window slack
     kv_wait_hist: jax.Array     # (H,) i32 — waiting-array occupancy
+    # ---- per-round trace-event table (PR 10) --------------------------
+    # Fixed-shape (E = 8·n_slots) compacted event list: the round's
+    # ADMIT / PREFILL_CHUNK / PARK / RESUME / PREFIX_ATTACH / COW /
+    # PREEMPT / FINISH records in canonical phase-major, lane-ascending
+    # order (`serving.events.SCAN_SEGMENTS`); entries past ``ev_n`` are
+    # EV_NONE padding.  The virtual clock of every event is the sample's
+    # ``now``.  Host `step()` mirrors the list bit-exactly.
+    ev_n: jax.Array             # i32 — number of valid events this round
+    ev_kind: jax.Array          # (E,) i32 — serving.events.EV_* kind
+    ev_uid: jax.Array           # (E,) i32 — request id (−1 padding)
+    ev_slot: jax.Array          # (E,) i32 — engine slot (−1 padding)
+    ev_arg: jax.Array           # (E,) i32 — per-kind payload (0 padding)
 
 
 class TelemetryRing(NamedTuple):
@@ -355,7 +367,8 @@ class TelemetryRing(NamedTuple):
 
 
 def make_telemetry_ring(capacity: int, n_tenants: int,
-                        hist: int = SLOT_TABLE) -> TelemetryRing:
+                        hist: int = SLOT_TABLE,
+                        ev_cap: int = 0) -> TelemetryRing:
     assert capacity > 0 and (capacity & (capacity - 1)) == 0, \
         "ring capacity must be a power of two (wrap-safe cursor mask)"
     R, T = capacity, n_tenants
@@ -372,7 +385,12 @@ def make_telemetry_ring(capacity: int, n_tenants: int,
             health=jnp.zeros((R,), jnp.uint32),
             credit=jnp.zeros((R, T), jnp.int32),
             poke_dead=jnp.zeros((R, T), jnp.uint32),
-            kv_wait_hist=jnp.zeros((R, hist), jnp.int32)))
+            kv_wait_hist=jnp.zeros((R, hist), jnp.int32),
+            ev_n=z,
+            ev_kind=jnp.zeros((R, ev_cap), jnp.int32),
+            ev_uid=jnp.full((R, ev_cap), -1, jnp.int32),
+            ev_slot=jnp.full((R, ev_cap), -1, jnp.int32),
+            ev_arg=jnp.zeros((R, ev_cap), jnp.int32)))
 
 
 def ring_append(ring: TelemetryRing, sample: TelemetrySample) -> TelemetryRing:
@@ -423,6 +441,12 @@ def ring_samples(ring, t0: float = 0.0) -> list:
             "poke_dead": [int(d) for d in np.asarray(buf.poke_dead[k])],
             "kv_wait_hist": [int(h) for h in
                              np.asarray(buf.kv_wait_hist[k])],
+            "events": [[int(ek), int(eu), int(es), int(ea)]
+                       for ek, eu, es, ea in zip(
+                           np.asarray(buf.ev_kind[k])[:int(buf.ev_n[k])],
+                           np.asarray(buf.ev_uid[k])[:int(buf.ev_n[k])],
+                           np.asarray(buf.ev_slot[k])[:int(buf.ev_n[k])],
+                           np.asarray(buf.ev_arg[k])[:int(buf.ev_n[k])])],
         })
     return out
 
@@ -495,8 +519,11 @@ def make_engine_state(qos: QoSState, n_slots: int, backlog_cap: int,
                            if prefix_entries else None))
     ring = None
     if ring_cap:
+        # event-table capacity: 8 phase segments of S lanes each — every
+        # kind can fire on at most S lanes per round, so the compacted
+        # table never overflows (serving.events.SCAN_SEGMENTS)
         ring = make_telemetry_ring(ring_cap, qos.ticket.shape[0],
-                                   hist=slot_table)
+                                   hist=slot_table, ev_cap=8 * n_slots)
     return EngineState(
         kv=kv,
         ring=ring,
@@ -613,9 +640,13 @@ def _chunk_phase(state: EngineState, chunk: int, budget: int,
     takes (`_share_flags`): a granted COW block REPLACES the slot's
     shared tail block in the table, the replaced id is decref'd in ONE
     batched `pool_release`, and ``slots.cow_src`` stages the source id
-    for token_fn's in-pass block copy.  Returns ``(state', emit,
-    n_cow)`` — the decode mask and the round's copy-on-write count."""
+    for token_fn's in-pass block copy.  Returns ``(state', emit, n_cow,
+    ev)`` — the decode mask, the round's copy-on-write count, and the
+    trace-event masks/args (PARK transitions with their deficits, RESUME
+    transitions, chunk token counts, COW takes with the replaced block
+    ids) the caller folds into the in-scan event table."""
     sl, kv = state.slots, state.kv
+    prev_parked = sl.parked  # pre-plan park state (PARK/RESUME transitions)
     sharing = kv.cache is not None
     S, MB = kv.tbl.shape
     held = jnp.sum((kv.tbl >= 0).astype(jnp.int32), axis=1)
@@ -670,7 +701,15 @@ def _chunk_phase(state: EngineState, chunk: int, budget: int,
         kv=KVPool(pool=pool, tbl=tbl, cache=kv.cache), slots=sl,
         stalls=state.stalls + jnp.sum(plan.parked.astype(jnp.int32)),
         chunks=state.chunks + jnp.sum((plan.tokens > 0).astype(jnp.int32)))
-    return state, plan.emit, n_cow
+    ev = {
+        "park": plan.parked & ~prev_parked,
+        "park_arg": plan.deficit,
+        "resume": prev_parked & ~plan.parked,
+        "chunk_tok": plan.tokens,
+        "cow": plan.cow if sharing else jnp.zeros_like(plan.parked),
+        "cow_old": old,
+    }
+    return state, plan.emit, n_cow, ev
 
 
 def _assign_slots(state: EngineState, admitted: jax.Array,
@@ -786,6 +825,10 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     pre = sl.busy & (sl.deadline <= now)
     n_pre = jnp.sum(pre.astype(jnp.int32))
     prerow = jnp.where(pre, sl.row, -1)
+    # trace: capture uid/progress at ENTRY — the slot may be re-assigned
+    # to a new request later this same round (its unit feeds this round's
+    # pool), which would overwrite rid/emitted before the phase-6 table
+    pre_uid, pre_arg = sl.rid, sl.emitted
     sl = sl._replace(busy=sl.busy & ~pre,
                      row=jnp.where(pre, -1, sl.row),
                      parked=sl.parked & ~pre)
@@ -958,8 +1001,10 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     # (newly admitted slots request their FIRST chunk right here — the
     # blocks the gate's headroom check just promised), park the stalled.
     n_cow = jnp.int32(0)
+    chunk_ev = None
     if chunked:
-        state, emit, n_cow = _chunk_phase(state, chunk, budget, block_size)
+        state, emit, n_cow, chunk_ev = _chunk_phase(state, chunk, budget,
+                                                    block_size)
     if admit_fn is not None:  # in-graph prefill for newly admitted slots
         model = admit_fn(model, state, rows, assign, tgt)
 
@@ -1021,9 +1066,61 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
     # bit-identity property of tests/test_obs.py) — extend both or
     # neither.
     if state.ring is not None:
+        from .events import (EV_ADMIT, EV_COW, EV_FINISH, EV_PARK,
+                             EV_PREEMPT, EV_PREFILL_CHUNK,
+                             EV_PREFIX_ATTACH, EV_RESUME)
         from .sentinels import round_health
 
         parked_mask = sl.busy & sl.parked
+        E = state.ring.buf.ev_kind.shape[1]
+        if E:
+            assert E == 8 * S, "event table must be 8 segments of S lanes"
+            # the fixed per-round event table: 8 phase-major segments of S
+            # lane-ascending entries (serving.events.SCAN_SEGMENTS), then
+            # ONE stable compaction (valid entries first, order kept) so
+            # the drained list equals the host step()'s per-kind appends
+            lane = jnp.arange(S, dtype=jnp.int32)
+            zb, zi = jnp.zeros((S,), bool), jnp.zeros((S,), jnp.int32)
+            admit_uid, admit_arg = bl.rid[rows], bl.prompt_len[rows]
+            if sharing:
+                att_mask = assign & (sh_cov[rows] > 0)
+                att_arg = sh_cov[rows]
+            else:
+                att_mask, att_arg = zb, zi
+            ck = chunk_ev if chunk_ev is not None else {
+                "park": zb, "park_arg": zi, "resume": zb,
+                "chunk_tok": zi, "cow": zb, "cow_old": zi}
+            segs = (
+                (EV_PREEMPT, pre, pre_uid, lane, pre_arg),
+                (EV_ADMIT, assign, admit_uid, tgt, admit_arg),
+                (EV_PREFIX_ATTACH, att_mask, admit_uid, tgt, att_arg),
+                (EV_PARK, ck["park"], sl.rid, lane, ck["park_arg"]),
+                (EV_RESUME, ck["resume"], sl.rid, lane, zi),
+                (EV_PREFILL_CHUNK, ck["chunk_tok"] > 0, sl.rid, lane,
+                 ck["chunk_tok"]),
+                (EV_COW, ck["cow"], sl.rid, lane, ck["cow_old"]),
+                (EV_FINISH, fin, sl.rid, lane, sl.emitted),
+            )
+            evm = jnp.concatenate([m for _, m, _, _, _ in segs])
+            kinds = jnp.concatenate(
+                [jnp.full((S,), k, jnp.int32) for k, _, _, _, _ in segs])
+            uids = jnp.concatenate(
+                [u.astype(jnp.int32) for _, _, u, _, _ in segs])
+            eslots = jnp.concatenate(
+                [t.astype(jnp.int32) for _, _, _, t, _ in segs])
+            eargs = jnp.concatenate(
+                [a.astype(jnp.int32) for _, _, _, _, a in segs])
+            order = jnp.argsort(~evm, stable=True)
+            ev_n = jnp.sum(evm.astype(jnp.int32))
+            keep = jnp.arange(E, dtype=jnp.int32) < ev_n
+            ev_kind = jnp.where(keep, kinds[order], 0)
+            ev_uid = jnp.where(keep, uids[order], -1)
+            ev_slot = jnp.where(keep, eslots[order], -1)
+            ev_arg = jnp.where(keep, eargs[order], 0)
+        else:  # ring built without an event table: empty columns
+            ze = jnp.zeros((0,), jnp.int32)
+            ev_n, ev_kind, ev_uid, ev_slot, ev_arg = (jnp.int32(0), ze,
+                                                      ze, ze, ze)
         sample = TelemetrySample(
             round_no=rno,
             now=now,
@@ -1055,7 +1152,9 @@ def engine_round(state: EngineState, model, now, *, token_fn: TokenFn,
             poke_dead=state.qos.dead,
             kv_wait_hist=bucket_histogram(
                 sl.park_bucket, parked_mask,
-                state.ring.buf.kv_wait_hist.shape[1]))
+                state.ring.buf.kv_wait_hist.shape[1]),
+            ev_n=ev_n, ev_kind=ev_kind, ev_uid=ev_uid, ev_slot=ev_slot,
+            ev_arg=ev_arg)
         state = state._replace(ring=ring_append(state.ring, sample))
     ys = RoundOut(tokens=toks, emit=emit, fin=fin, pre=pre, row=finrow,
                   prerow=prerow,

@@ -66,8 +66,11 @@ from ..resilience.faults import (
     STRAGGLER,
     FaultPlan,
 )
+from ..obs.hist import LogHistogram
+from ..obs.trace import TraceBuffer, build_spans
 from ..runtime.coordinator import Coordinator, DistributedTicketLease, KVStore
 from ..runtime.reaper import LeaseReaper, leases_clean
+from .events import EV_MIGRATE, EV_ROUTE, EV_SHED, EV_SUBMIT
 from .scheduler import Request
 
 # ---------------------------------------------------------------------------
@@ -267,6 +270,15 @@ class ReplicaRouter:
         self.completed: dict[int, list[int]] = {}  # rid → delivered tokens
         self.events: list[dict] = []
         self.round_no = 0
+        # fabric-side trace events (SUBMIT/ROUTE/MIGRATE/SHED) — merged
+        # with every replica engine's buffer by cluster_spans(); tagging
+        # each engine's buffer with its replica idx is what lets a span
+        # that migrated show WHICH replica ran which segment
+        self.trace = TraceBuffer()
+        for rep in self.replicas:
+            rep.eng._trace.replica = rep.idx
+        self._migrate_at: dict[int, float] = {}  # rid → MIGRATE clock
+        self.migration_hist = LogHistogram(resolution=0.05, min_value=1e-3)
 
     # ----------------------------------------------------------- client ----
 
@@ -281,6 +293,8 @@ class ReplicaRouter:
         self.requests[cr.rid] = cr
         self.queue.append(cr)
         self.stats.accepted += 1
+        self.trace.add(EV_SUBMIT, cr.rid, -1, 0, cr.submit_clock,
+                       self.round_no)
         return cr
 
     def submit_batch(self, crs) -> None:
@@ -357,6 +371,13 @@ class ReplicaRouter:
         self.stats.replicas_dead += 1
         self.coord.leave(rep.idx)
         self._log("replica_dead", replica=rep.idx, reason=reason)
+        # flight recorder: cut the dead replica's post-mortem bundle NOW,
+        # while its last samples/events are still in the window
+        fl = getattr(getattr(rep.eng, "_obs", None), "flight", None)
+        if fl is not None:
+            fl.dump("replica_reaped",
+                    extra={"replica": rep.idx, "cause": reason,
+                           "round": rnd})
         # free every lease ticket the corpse still owns: tombstone the
         # waiters FIRST (so the holder releases skip them in one walk),
         # then force-release the holders
@@ -407,6 +428,11 @@ class ReplicaRouter:
         heapq.heappush(self._retryq, (rnd + delay, cr.rid))
         self._log("requeue", rid=cr.rid, attempt=cr.retries,
                   due=rnd + delay)
+        self.trace.add(EV_MIGRATE, cr.rid, -1, cr.retries, self._clk[0],
+                       rnd)
+        # migration latency clock starts at the FIRST requeue; stops when
+        # the request is re-admitted into a healthy engine (_admit)
+        self._migrate_at.setdefault(cr.rid, self._clk[0])
 
     def _spawn_successor(self, dead: Replica, rnd: int) -> set[int]:
         """Warm takeover: a fresh replica adopts the dead one's last
@@ -431,6 +457,7 @@ class ReplicaRouter:
         lease2 = DistributedTicketLease(
             self.kv, f"replica/{idx2}", capacity=self.capacity, clock=clock)
         rep2 = Replica(idx2, rz2, lease2, CircuitBreaker(*self._breaker_cfg))
+        eng2._trace.replica = idx2
         self.replicas.append(rep2)
         self.coord.join(idx2)
         self.reaper.add(lease2)
@@ -469,6 +496,8 @@ class ReplicaRouter:
         self.shed[cr.rid] = reason
         cr.done_event.set()
         self._log("shed", rid=cr.rid, reason=reason)
+        self.trace.add(EV_SHED, cr.rid, -1, 0, self._clk[0],
+                       self.round_no)
 
     def _shed_pass(self) -> None:
         """Deadline-aware overload relief: a queued request whose deadline
@@ -502,6 +531,8 @@ class ReplicaRouter:
             rep.pending[cr.rid] = t
             rep.bucket_obs[cr.rid] = rep.lease.bucket_state(t)
             self._log("bind", rid=cr.rid, replica=rep.idx, ticket=t)
+            self.trace.add(EV_ROUTE, cr.rid, rep.idx, t, self._clk[0],
+                           rnd, replica=rep.idx)
 
     def _admit(self, rnd: int) -> None:
         """Promote granted bindings to engine submissions.  Re-polls are
@@ -534,6 +565,9 @@ class ReplicaRouter:
                 del rep.bucket_obs[rid]
                 cr.state = "inflight"
                 cr.attempts += 1
+                m = self._migrate_at.pop(rid, None)
+                if m is not None:
+                    self.migration_hist.add(max(self._clk[0] - m, 1e-3))
 
     # ------------------------------------------------------------ drive ----
 
@@ -714,12 +748,41 @@ class ReplicaRouter:
             "stragglers": self.coord.stragglers(),
         }
 
+    def cluster_spans(self) -> dict:
+        """Stitched per-request span trees across the whole fleet: the
+        router's fabric events (SUBMIT/ROUTE/MIGRATE/SHED) merged with
+        every replica engine's in-scan event stream.  A migrated request
+        comes back as ONE span whose segments carry the replica index
+        that ran them, with a ``migration`` segment bridging the gap."""
+        return build_spans(self.trace,
+                           *[rep.eng._trace for rep in self.replicas])
+
+    def fabric_telemetry(self) -> dict:
+        """The router sections `obs.cluster.aggregate(router=...)` folds
+        into the fleet report."""
+        return {
+            "leases": {
+                rep.idx: {"headroom": rep.lease.headroom(),
+                          "capacity": self.capacity,
+                          "alive": rep.alive}
+                for rep in self.replicas
+            },
+            "migrations": self.stats.migrated,
+            "migration_latency": self.migration_hist.percentiles(),
+            "shed": len(self.shed),
+            "deaths": self.stats.replicas_dead,
+            "duplicates_suppressed": self.stats.duplicates_suppressed,
+        }
+
     def telemetry(self) -> dict:
         return {
             "round": self.round_no,
             "stats": self.stats.__dict__.copy(),
             "epoch": self.coord.epoch,
             "queue": len(self.queue),
+            "fabric": self.fabric_telemetry(),
+            "trace": {"events": len(self.trace),
+                      "dropped": self.trace.dropped},
             "replicas": {
                 rep.idx: {
                     "alive": rep.alive,
@@ -766,13 +829,17 @@ def toy_cluster(n_replicas: int, *, seed: int = 0, plan=None,
     engine_plans = engine_plans or {}
 
     def build_rz():
+        # obs may be a shared EngineObs OR a zero-arg factory (one
+        # recorder per replica — what per-replica flight bundles and the
+        # fleet aggregator want)
         eng = ContinuousBatchingEngine(
             lambda a: np.array([r.rid * 1000 + len(r.out_tokens)
                                 for r in a], np.int64),
             lambda r: None, n_slots=n_slots,
             tenants={"gold": 2.0, "bronze": 1.0}, clock=lambda: clk[0],
             kv_pool=(16, 4), chunked_prefill=(5, 9, 16), prompt_cap=32,
-            use_kernel=True, watchdog=watchdog, obs=obs)
+            use_kernel=True, watchdog=watchdog,
+            obs=obs() if callable(obs) else obs)
         ck = CheckpointManager(tempfile.mkdtemp(prefix="repro-cluster-")) \
             if snapshot_every else None
         return ResilientEngine(eng, plan=None, react_every=2,
@@ -789,7 +856,8 @@ def toy_cluster(n_replicas: int, *, seed: int = 0, plan=None,
         replicas, kv=kv, clk=clk, token_fn=rid_token_fn,
         capacity=capacity, ttl=ttl_rounds * inner_k * dt, dt=dt,
         inner_k=inner_k, plan=plan, seed=seed,
-        standby_factory=build_rz if standby else None, obs=obs,
+        standby_factory=build_rz if standby else None,
+        obs=None if callable(obs) else obs,
         **router_kw)
 
 

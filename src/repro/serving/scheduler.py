@@ -78,6 +78,19 @@ from ..core.functional import (
     woken_mask,
 )
 from ..core.twa_semaphore import TWASemaphore
+from .events import (
+    EV_ADMIT,
+    EV_COW,
+    EV_EXPIRE,
+    EV_FINISH,
+    EV_PARK,
+    EV_PREEMPT,
+    EV_PREFILL_CHUNK,
+    EV_PREFIX_ATTACH,
+    EV_QUARANTINE,
+    EV_RESUME,
+    EV_SUBMIT,
+)
 from .prefix import (
     cache_clear,
     cache_lookup,
@@ -207,6 +220,28 @@ class ContinuousBatchingEngine:
         # TelemetryRing in its ONE host sync (engine_state.py docstring).
         self._obs = obs
         self._last_samples: list[dict] = []  # most recent step/megastep
+        # --- request tracing (repro.obs.trace, PR 10) ---
+        # Always-on bounded host-side trace buffer.  Engine-phase events
+        # (ADMIT/PARK/…/FINISH) arrive via the per-round samples — emitted
+        # by the in-scan event table on the megastep path and mirrored
+        # bit-exactly by step()'s bookkeeping below; host-only lifecycle
+        # events (SUBMIT/EXPIRE/QUARANTINE) are appended directly.  Pure
+        # host writes: tracing adds ZERO device syncs.
+        from ..obs.trace import TraceBuffer
+
+        self._trace = TraceBuffer()
+        # host step()'s per-round trace-event scratch, one list per
+        # in-scan kind, appended in the device round's phase order and
+        # flattened by `_host_sample` in the canonical segment order
+        # (serving.events.SCAN_SEGMENTS)
+        self._ev_preempt: list[list[int]] = []
+        self._ev_admit: list[list[int]] = []
+        self._ev_attach: list[list[int]] = []
+        self._ev_park: list[list[int]] = []
+        self._ev_resume: list[list[int]] = []
+        self._ev_chunk: list[list[int]] = []
+        self._ev_cow: list[list[int]] = []
+        self._ev_finish: list[list[int]] = []
         # --- invariant sentinels (serving.sentinels) ---
         # ``watchdog=W``: the stuck-slot sentinel trips (H_STUCK in the
         # per-round health bitmask) when any busy slot makes no progress
@@ -372,6 +407,8 @@ class ContinuousBatchingEngine:
             req.fast = bool(admitted[0])
             req.observed_seq = int(self.sema.bucket_seq[req.bucket])
             self.backlog.append(req)
+            self._trace.add(EV_SUBMIT, req.rid, -1, 0, req.submit_clock,
+                            self._round_no)
         return req
 
     def submit_batch(self, reqs: list[Request]) -> None:
@@ -402,6 +439,8 @@ class ContinuousBatchingEngine:
                 r.fast = bool(a)
                 r.observed_seq = int(self.sema.bucket_seq[r.bucket])
                 self.backlog.append(r)
+                self._trace.add(EV_SUBMIT, r.rid, -1, 0, sclk,
+                                self._round_no)
 
     # ------------------------------------------------- multi-tenant (QoS) ---
 
@@ -483,6 +522,8 @@ class ContinuousBatchingEngine:
                                      np.asarray(buckets), np.asarray(expired)):
                 r.enqueue_t = time.time()
                 r.submit_clock = now
+                self._trace.add(EV_SUBMIT, r.rid, -1, 0, now,
+                                self._round_no)
                 if e:
                     self._expire_req(r, i)
                     continue
@@ -726,12 +767,18 @@ class ContinuousBatchingEngine:
 
     def _expire_req(self, r: Request, tidx: int) -> None:
         r.expired = True
-        r.expire_round = self._round_no
+        pre_rnd = r.expire_round  # megastep drain pre-stamps the in-scan
+        r.expire_round = self._round_no  # round; host paths use this one
         self.stats.expired += 1
         self.tenant_expired[self._tenant_names[tidx]] += 1
         r.finish_t = time.time()
         if r.finish_clock is None:  # megastep drains pre-stamp per-round
             r.finish_clock = self._clock()
+        # backlog expiry is host-resolved on BOTH serving paths (heap pop
+        # order vs row order has no canonical in-scan mirror), so its
+        # trace terminal is a host-side event, never an in-scan one
+        self._trace.add(EV_EXPIRE, r.rid, -1, 0, r.finish_clock,
+                        pre_rnd if pre_rnd >= 0 else r.expire_round)
         self._obs_done(r)
         r.done_event.set()
 
@@ -1014,8 +1061,14 @@ class ContinuousBatchingEngine:
         same round's replenish and the next live ticket is re-granted in
         FCFS order (the megastep does the identical thing in-graph)."""
         now = self._clock()
-        due = [slot for slot, req in self.active.items()
-               if req.deadline is not None and req.deadline <= now]
+        # ascending slot order — the device preempt mask is walked lane-
+        # ascending, and the trace events below must list in that order
+        due = sorted(slot for slot, req in self.active.items()
+                     if req.deadline is not None and req.deadline <= now)
+        for slot in due:
+            r = self.active[slot]
+            self._ev_preempt.append(
+                [EV_PREEMPT, r.rid, slot, len(r.out_tokens)])
         if self._kv_share:
             # the device preempt phase decrefs every preempted slot's row
             # in ONE batched pool_release — mirror it on the replica, then
@@ -1045,6 +1098,9 @@ class ContinuousBatchingEngine:
             self.stats.host_syncs += 1
             now_r = self._now_r = self._clock()
             self._round_gate_stalls = 0
+            self._ev_preempt, self._ev_admit, self._ev_attach = [], [], []
+            self._ev_park, self._ev_resume, self._ev_chunk = [], [], []
+            self._ev_cow, self._ev_finish = [], []
             self._round_prefill_tokens = 0
             self._round_prefill_chunks = 0
             self._round_prefix_hits = 0
@@ -1054,13 +1110,30 @@ class ContinuousBatchingEngine:
                           self.stats.preempted)
             self._preempt_expired()
             admitted = self._admit_ready()
-            if self._kv_share:
-                # block identities make slot NUMBERING semantic under
-                # sharing (a slot's take pulls ids off the free queue in
-                # slot order) — mirror the device `_assign_slots` exactly:
-                # FCFS-ordered admits onto ASCENDING free slots.  The
-                # non-sharing paths only track counters, where assignment
-                # order is unobservable.
+            if admitted:
+                # mirror the device `_assign_slots` in EVERY mode: admits
+                # in packed-FCFS-key order take ASCENDING free slots.
+                # Under sharing this is load-bearing for block identities
+                # (a slot's take pulls ids off the free queue in slot
+                # order); in the counter-only modes it pins the ADMIT
+                # trace events' slot column to the in-scan event table
+                # bit-exactly (tests/test_obs.py).
+                from .engine_state import _D_CLAMP, _T_BITS
+
+                if self._tenants is not None:
+                    grants = np.asarray(self.qos.grant)
+                else:
+                    grants = None
+                    g0 = int(self.sema.grant)
+                for r in admitted:
+                    tidx = (self._tindex[r.tenant_id]
+                            if grants is not None else 0)
+                    d = (r.ticket
+                         - (int(grants[tidx]) if grants is not None
+                            else g0)) & 0xFFFFFFFF
+                    d = d - (1 << 32) if d >= (1 << 31) else d
+                    r.prio_key = (max(-_D_CLAMP, min(_D_CLAMP, d))
+                                  << _T_BITS) + tidx
                 admitted = sorted(admitted, key=lambda r: r.prio_key)
                 self.free_slots.sort(reverse=True)
             for req in admitted:
@@ -1071,6 +1144,9 @@ class ContinuousBatchingEngine:
                 req.last_adv_round = rnd  # assignment arms the watchdog
                 self.active[slot] = req
                 self.stats.admitted += 1
+                self._ev_admit.append(
+                    [EV_ADMIT, req.rid, slot,
+                     min(len(req.prompt), self._prompt_cap) or 1])
                 if self._chunk:
                     # chunked: no instant prefill — the chunk phase below
                     # streams the prompt in; prefill_fn fires on the round
@@ -1099,6 +1175,9 @@ class ContinuousBatchingEngine:
                             self._hshare_sync()
                         req.prefill_pos = cov_i
                         req.kv_blocks = len(ids)
+                        if cov_i > 0:
+                            self._ev_attach.append(
+                                [EV_PREFIX_ATTACH, req.rid, slot, cov_i])
                         pl = min(len(req.prompt), self._prompt_cap) or 1
                         if cov_i >= pl:  # fully covered: decode-ready now
                             self._round_prefix_hits += 1
@@ -1132,6 +1211,10 @@ class ContinuousBatchingEngine:
                     req.last_tok_clock = now_r
                     if len(req.out_tokens) >= req.max_new_tokens:
                         done_slots.append(slot)
+                for slot in sorted(done_slots):  # device fin mask: lane-
+                    r = self.active[slot]        # ascending event order
+                    self._ev_finish.append(
+                        [EV_FINISH, r.rid, slot, len(r.out_tokens)])
                 if self._kv_share:
                     # ONE batched decref for the whole finish phase (the
                     # device round's completion release) before the
@@ -1174,8 +1257,10 @@ class ContinuousBatchingEngine:
         prio_k = np.zeros(S, np.int32)
         seq = np.asarray(self._kv_sema.bucket_seq)
         rem = np.zeros(S, np.int32)
+        rids = np.full(S, -1, np.int32)
         for s, r in self.active.items():
             pl = min(len(r.prompt), self._prompt_cap) or 1
+            rids[s] = r.rid
             busy[s] = True
             parked[s] = r.parked
             woken[s] = r.parked and seq[r.park_bucket] != r.park_seq
@@ -1202,6 +1287,17 @@ class ContinuousBatchingEngine:
         parked_o = np.asarray(plan.parked)
         deficit = np.asarray(plan.deficit)
         newly = parked_o & (deficit > 0)
+        # trace events — PARK/RESUME on park-state TRANSITIONS, one
+        # PREFILL_CHUNK per slot that landed tokens; lane-ascending, the
+        # same masks/args the device `_chunk_phase` folds into the table
+        for s in np.flatnonzero(parked_o & ~parked):
+            self._ev_park.append([EV_PARK, int(rids[s]), int(s),
+                                  int(deficit[s])])
+        for s in np.flatnonzero(parked & ~parked_o):
+            self._ev_resume.append([EV_RESUME, int(rids[s]), int(s), 0])
+        for s in np.flatnonzero(tokens > 0):
+            self._ev_chunk.append([EV_PREFILL_CHUNK, int(rids[s]), int(s),
+                                   int(tokens[s])])
         if sharing:
             # the replica takes the granted blocks through the SAME
             # `pool_try_alloc` the scanned round uses (free-queue cursor,
@@ -1218,6 +1314,9 @@ class ContinuousBatchingEngine:
             bkt, sq = np.asarray(bkt_j), np.asarray(sq_j)
             old = self._kv_htbl[np.arange(S),
                                 np.clip(held - 1, 0, self._kv_mb - 1)]
+            for s in np.flatnonzero(cow_g):  # arg = the replaced block id
+                self._ev_cow.append([EV_COW, int(rids[s]), int(s),
+                                     int(old[s])])
             base = np.where(cow_g, held - 1, held)
             for s in range(S):
                 for k in range(int(take[s])):
@@ -1671,6 +1770,8 @@ class ContinuousBatchingEngine:
             from .engine_state import ring_samples
 
             self._last_samples = ring_samples(st_h.ring, t0=t0)
+            for smp in self._last_samples:
+                self._trace.ingest_sample(smp)
             if sharing:
                 self.stats.prefix_hits += sum(
                     s["prefix_hits"] for s in self._last_samples)
@@ -1702,6 +1803,11 @@ class ContinuousBatchingEngine:
             req = self.active.pop(slot)
             self.free_slots.append(slot)
             self.stats.quarantined += 1
+            # quarantine is a host-side recovery action BETWEEN rounds on
+            # both serving paths — traced directly, never via the in-scan
+            # table (arg = blocks the eviction hands back)
+            self._trace.add(EV_QUARANTINE, req.rid, slot, req.kv_blocks,
+                            self._clock(), self._round_no)
             if self._kv_pool is not None:
                 if self._kv_state is not None:
                     # megastep-persistent pool: the device block table is
@@ -1906,6 +2012,7 @@ class ContinuousBatchingEngine:
 
     def _record_round(self, sample: dict) -> None:
         self._last_samples = [sample]
+        self._trace.ingest_sample(sample)
         if self._obs is not None:
             self._obs.record_round(sample)
 
@@ -1997,6 +2104,12 @@ class ContinuousBatchingEngine:
             "credit": [int(c) for c in credit],
             "poke_dead": [int(d) for d in dead],
             "kv_wait_hist": [int(h) for h in hist],
+            # per-kind lists flattened in the canonical segment order
+            # (serving.events.SCAN_SEGMENTS) — the exact list the device
+            # event table drains after its stable compaction
+            "events": (self._ev_preempt + self._ev_admit
+                       + self._ev_attach + self._ev_park + self._ev_resume
+                       + self._ev_chunk + self._ev_cow + self._ev_finish),
         }
 
     def telemetry(self) -> dict:
@@ -2040,6 +2153,10 @@ class ContinuousBatchingEngine:
                 "snapshots": self.stats.snapshots,
                 "restores": self.stats.restores,
             },
+            # per-request span trees + critical-path breakdown off the
+            # host trace buffer (repro.obs.trace) — pure host reads, the
+            # no-hidden-sync contract above covers this key too
+            "trace": self._trace.summary(),
         }
         if self._kv_pool is not None:
             # block-pool gauges (the block semaphore's counter identity):

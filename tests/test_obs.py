@@ -33,12 +33,24 @@ except ImportError:
 from repro.obs import (
     CallbackSink,
     EngineObs,
+    FlightRecorder,
     JsonlSink,
     LogHistogram,
     RollingMedian,
     StdoutSink,
+    TenantSLO,
+    aggregate,
+    build_spans,
+    to_perfetto,
 )
 from repro.serving.engine_state import rid_token_fn
+from repro.serving.events import (
+    EV_COW,
+    EV_PARK,
+    EV_PREFIX_ATTACH,
+    EV_RESUME,
+    TERMINAL_EVENTS,
+)
 from repro.serving.scheduler import ContinuousBatchingEngine, Request
 
 import test_chunked_prefill as tcp
@@ -56,6 +68,10 @@ _SAMPLE_KEYS = {
     # PR 9 sharing gauges — zero on non-sharing engines, still mirrored
     # bit-identically host step() vs megastep ring
     "prefix_hits", "blocks_shared", "cow_copies",
+    # PR 10 in-scan trace-event table: list of [kind, uid, slot, arg] in
+    # the canonical segment order — the `==` below IS the bit-identical
+    # megastep-vs-host event-stream property
+    "events",
 }
 
 _CLOCK_FIELDS = ("submit_clock", "first_tok_clock", "last_tok_clock",
@@ -387,3 +403,293 @@ def test_callback_sink_filter():
     sink.emit({"tokens": 0})
     sink.emit({"tokens": 3})
     assert got == [{"tokens": 3}] and sink.emitted == 1
+
+
+# ------------------------------------------- PR 10: trace completeness ------
+
+
+def _drain_engine(eng, clk, *, max_megasteps=20, K=12):
+    """Megasteps until every submitted request is resolved (virtual time
+    keeps advancing); returns total rounds driven."""
+    total = (eng.stats.finished + eng.stats.expired
+             + len(eng.backlog) + len(eng.active)
+             + sum(len(q) for q in (eng._tenant_queues or [])))
+    rounds = 0
+    for _ in range(max_megasteps):
+        nows = np.asarray([(rounds + k) * DT for k in range(K)], np.float32)
+        eng.megastep(K, token_fn=rid_token_fn, nows=nows)
+        rounds += K
+        if eng.stats.finished + eng.stats.expired >= total:
+            break
+    assert eng.stats.finished + eng.stats.expired >= total, "did not drain"
+    return rounds
+
+
+def _assert_wellformed(spans, reqs, tag=""):
+    """Exactly ONE closed, well-formed span per submitted request — no
+    orphans, no duplicates, exactly one terminal event, non-negative
+    critical-path categories that never exceed the total."""
+    assert set(spans) == {r.rid for r in reqs}, tag
+    for rid, sp in spans.items():
+        assert sp["terminal"] is not None, (tag, rid)
+        terminals = [e for e in sp["events"]
+                     if e["kind"] in TERMINAL_EVENTS]
+        assert len(terminals) == 1, (tag, rid)
+        bd = sp["breakdown"]
+        for k in ("queue", "prefill", "park", "decode", "migration"):
+            assert bd[k] >= 0, (tag, rid, k)
+            assert bd[k] <= bd["total"] + 1e-6, (tag, rid, k)
+
+
+def test_trace_spans_park_resume():
+    """Chunked-prefill path: long prompts park on the block TWA mid
+    prefill; every request still yields one span, and the parks surface
+    as PARK/RESUME event pairs with park time in the breakdown."""
+    clk = [0.0]
+    eng = tcp._mk_chunked(clk)
+    reqs = [Request(rid=i, prompt=[2] * 17, max_new_tokens=4,
+                    tenant_id=["gold", "bronze"][i % 2])
+            for i in range(8)]
+    eng.submit_batch(reqs)
+    _drain_engine(eng, clk)
+    spans = build_spans(eng._trace)
+    _assert_wellformed(spans, reqs, "park_resume")
+    kinds = [e["kind"] for sp in spans.values() for e in sp["events"]]
+    assert EV_PARK in kinds and EV_RESUME in kinds
+    assert any(sp["breakdown"]["park"] > 0 for sp in spans.values())
+    assert any(s["name"] == "park" for sp in spans.values()
+               for s in sp["segments"])
+
+
+def test_trace_spans_deadline_preemption():
+    """Tight deadlines: queue tombstones (EXPIRE) and mid-decode
+    preemptions (PREEMPT) both close their spans — exactly one terminal
+    each, nothing orphaned."""
+    clk = [0.0]
+    eng = tms._mk_engine(clk)
+    reqs = tms._workload(11, 18, 0.8)
+    eng.submit_batch(reqs)
+    _drain_engine(eng, clk)
+    spans = build_spans(eng._trace)
+    _assert_wellformed(spans, reqs, "preempt")
+    terms = {sp["terminal"] for sp in spans.values()}
+    assert "FINISH" in terms
+    assert terms & {"PREEMPT", "EXPIRE"}, terms
+
+
+def test_trace_spans_prefix_attach():
+    """Prefix-sharing path: cached-prefix admissions emit PREFIX_ATTACH
+    (and tail collisions later COW) without disturbing span shape."""
+    import test_prefix_cache as tpc
+
+    clk = [0.0]
+    eng = tpc._mk_share(clk)
+    reqs = tpc._share_workload(5, 14, 0.0)
+    eng.submit_batch(reqs)
+    _drain_engine(eng, clk)
+    spans = build_spans(eng._trace)
+    _assert_wellformed(spans, reqs, "prefix")
+    kinds = [e["kind"] for sp in spans.values() for e in sp["events"]]
+    assert EV_PREFIX_ATTACH in kinds
+    att = [e for sp in spans.values() for e in sp["events"]
+           if e["kind"] == EV_PREFIX_ATTACH]
+    assert all(e["arg"] > 0 for e in att)  # arg = covered tokens
+
+
+def test_trace_spans_ticket_wrap():
+    """Spans stay complete when every TWA counter straddles 2³² during
+    the run (the wrap-safe `_sdist` property at the trace level)."""
+    clk = [0.0]
+    eng = tcp._mk_chunked(clk, wrap=True)
+    reqs = tcp._workload(3, 10, 0.0)
+    eng.submit_batch(reqs)
+    _drain_engine(eng, clk)
+    _assert_wellformed(build_spans(eng._trace), reqs, "wrap")
+
+
+def test_trace_host_step_equals_megastep_spans():
+    """The host step() trace and the megastep ring-drain trace build
+    IDENTICAL span sets (same terminals, same event kinds per uid) —
+    the bit-identity property lifted to the span level."""
+    eh, em = _mk_pair(tcp._mk_chunked)
+    rh = tcp._workload(9, 12, 0.5)
+    rm = tcp._workload(9, 12, 0.5)
+    hs, ms = _drive_pair(eh, em, rh, rm, 24)
+    sph = build_spans(eh._trace)
+    spm = build_spans(em._trace)
+    assert set(sph) == set(spm)
+    for rid in sph:
+        a, b = sph[rid], spm[rid]
+        assert a["terminal"] == b["terminal"], rid
+        assert [e["kind"] for e in a["events"]] == \
+            [e["kind"] for e in b["events"]], rid
+        assert a["breakdown"] == b["breakdown"], rid
+
+
+def test_trace_cluster_migration_and_flight():
+    """ISSUE acceptance: a cluster run with one REPLICA_KILL produces a
+    stitched span per surviving request — migrated ones carrying a
+    ``migration`` segment and BOTH replica indices — plus a
+    flight-recorder bundle cut from the dead replica."""
+    from repro.resilience.faults import REPLICA_KILL, FaultEvent, FaultPlan
+    from repro.serving.router import toy_cluster, toy_workload
+
+    plan = FaultPlan(seed=0, events=(
+        FaultEvent(round=1, kind=REPLICA_KILL, arg=0, delta=2),))
+    rt = toy_cluster(2, seed=3, plan=plan,
+                     obs=lambda: EngineObs(
+                         flight=FlightRecorder(capacity=16)))
+    reqs = toy_workload(10, seed=5)
+    rt.submit_batch(reqs)
+    rep = rt.run(max_rounds=80)
+    assert rep["stats"]["migrated"] > 0, "plan produced no migration"
+
+    spans = rt.cluster_spans()
+    surviving = [r.rid for r in reqs if r.rid in rt.completed]
+    assert set(spans) == {r.rid for r in reqs}
+    for rid in surviving:
+        sp = spans[rid]
+        assert sp["terminal"] == "FINISH", rid
+        assert len([e for e in sp["events"]
+                    if e["kind"] in TERMINAL_EVENTS]) == 1, rid
+    migrated = [sp for sp in spans.values() if sp["migrations"] > 0]
+    assert migrated
+    for sp in migrated:
+        assert any(s["name"] == "migration" for s in sp["segments"])
+        assert sp["breakdown"]["migration"] > 0
+        if sp["terminal"] == "FINISH":
+            assert len(sp["replicas"]) >= 2, sp["uid"]
+
+    dead = [r for r in rt.replicas if not r.alive]
+    assert dead
+    bundles = dead[0].eng._obs.flight.bundles
+    assert any(b["reason"] == "replica_reaped" for b in bundles)
+    b = [b for b in bundles if b["reason"] == "replica_reaped"][0]
+    assert b["samples"] and isinstance(b["health"]["flags"], list)
+
+    # fleet aggregation over the per-replica recorders
+    fleet = aggregate([r.eng._obs for r in rt.replicas],
+                      router=rt.fabric_telemetry())
+    assert fleet["cluster"]["finished"] == len(surviving)
+    assert fleet["fabric"]["migrations"] == rep["stats"]["migrated"]
+    assert fleet["fabric"]["migration_latency"]["count"] > 0
+
+
+def test_perfetto_export_format():
+    """Chrome-trace JSON: every slice is a complete ``ph:"X"`` event with
+    µs timestamps, metadata rows name pids/tids, and the whole thing
+    round-trips through json — the chrome://tracing contract."""
+    clk = [0.0]
+    eng = tcp._mk_chunked(clk)
+    reqs = tcp._workload(2, 8, 0.3)
+    eng.submit_batch(reqs)
+    _drain_engine(eng, clk)
+    doc = to_perfetto(build_spans(eng._trace))
+    doc2 = json.loads(json.dumps(doc))
+    evs = doc2["traceEvents"]
+    assert evs
+    for e in evs:
+        assert e["ph"] in ("X", "i", "M")
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+            assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    names = {e["name"] for e in evs if e["ph"] == "X"}
+    assert names <= {"queue", "prefill", "park", "decode", "migration"}
+
+
+def test_engine_telemetry_trace_key():
+    """`telemetry()['trace']` surfaces the span summary on BOTH serving
+    paths, and host-step event ingestion matches the sample stream."""
+    clk = [0.0]
+    eng = tcp._mk_chunked(clk)
+    eng.submit_batch(tcp._workload(4, 6, 0.0))
+    k = 0
+    while eng.stats.finished + eng.stats.expired < 6 and k < 200:
+        clk[0] = k * DT
+        eng.step(_IDENT)
+        k += 1
+    tr = eng.telemetry()["trace"]
+    assert tr["spans"] == 6 and tr["complete"] == 6
+    assert set(tr["critical_path"]) == {"queue", "prefill", "park",
+                                        "decode", "migration"}
+    assert tr["events"] > 0 and tr["dropped"] == 0
+
+
+# --------------------------------- PR 10: mergeable histograms / fleet SLO --
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.05, 0.01]))
+def test_log_histogram_merge_equals_combined_stream(seed, res):
+    """Satellite property: merge(a, b) reports EXACTLY the quantiles of
+    one histogram fed the concatenated stream — bucket-wise addition is
+    lossless, so fleet aggregation pays zero extra quantile error."""
+    rng = np.random.default_rng(seed)
+    xs = rng.lognormal(0.0, 2.0, rng.integers(1, 200))
+    ys = rng.lognormal(1.0, 1.0, rng.integers(1, 200))
+    a, b, c = (LogHistogram(resolution=res) for _ in range(3))
+    for x in xs:
+        a.add(float(x))
+    for y in ys:
+        b.add(float(y))
+    for v in list(xs) + list(ys):
+        c.add(float(v))
+    a.merge(b)
+    assert a.count == c.count and a.max == c.max and a.min == c.min
+    assert math.isclose(a.sum, c.sum, rel_tol=1e-12)
+    for q in (0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0):
+        assert a.quantile(q) == c.quantile(q), (q, a.quantile(q))
+
+
+def test_tenant_slo_merge():
+    a = TenantSLO(ttft_target=5.0)
+    b = TenantSLO(ttft_target=5.0)
+    a.record(n_tokens=3, expired=False, preempted=False, submit_clock=0.0,
+             first_tok_clock=1.0, last_tok_clock=2.0)
+    b.record(n_tokens=2, expired=False, preempted=False, submit_clock=0.0,
+             first_tok_clock=9.0, last_tok_clock=9.5)
+    b.record(n_tokens=0, expired=True, preempted=False, submit_clock=0.0,
+             first_tok_clock=None, last_tok_clock=None)
+    a.merge(b)
+    s = a.summary()
+    assert s["submitted"] == 3 and s["finished"] == 2 and s["expired"] == 1
+    assert s["tokens"] == 5 and s["attainment"] == 1 / 3
+    assert s["ttft"]["count"] == 2
+    try:
+        a.merge(TenantSLO(ttft_target=1.0))
+        assert False, "target mismatch must raise"
+    except ValueError:
+        pass
+
+
+def test_flight_recorder_edge_trigger():
+    """One bundle per NEW sentinel bit — a persistently sick engine does
+    not flood the bundle ring; explicit dump() always cuts one."""
+    fr = FlightRecorder(capacity=4)
+    fr.observe_round({"round": 0, "clock": 0.0, "health": 0})
+    fr.observe_round({"round": 1, "clock": 0.5, "health": 1})
+    fr.observe_round({"round": 2, "clock": 1.0, "health": 1})  # same bit
+    fr.observe_round({"round": 3, "clock": 1.5, "health": 3})  # new bit
+    assert [b["reason"] for b in fr.bundles] == ["sentinel", "sentinel"]
+    assert fr.bundles[1]["extra"]["new_bits"] == 2
+    fr.dump("manual", extra={"k": 1})
+    assert fr.bundles[-1]["reason"] == "manual"
+    assert len(fr.bundles[-1]["samples"]) == 4  # bounded window
+    assert fr.summary()["bundles"] == 3
+
+
+def test_engine_obs_health_flags_surfaced():
+    """Satellite: the health bitmask is decoded to named flags in the
+    summary and on sink records (single authoritative table in
+    serving.sentinels)."""
+    from repro.serving.sentinels import HEALTH_BITS
+
+    got = []
+    obs = EngineObs([CallbackSink(got.append)],
+                    flight=FlightRecorder(capacity=2))
+    bit = HEALTH_BITS["slot_conserve"]
+    obs.record_round({"round": 0, "clock": 0.0, "health": bit})
+    s = obs.summary()
+    assert s["health"]["flags"] == ["slot_conserve"]
+    assert got[0]["health_flags"] == ["slot_conserve"]
+    assert obs.flight.bundles[0]["health"]["flags"] == ["slot_conserve"]
